@@ -1,0 +1,34 @@
+"""Kernel-path micro-benchmarks (CPU host): Lemma 3.1's O(dL) modal
+evaluation vs the O~(L) rational-FFT evaluation (Lemma A.6), and the fused
+decode-step math. Pallas wall-times require real TPU; interpret-mode numbers
+are correctness-path only, so we time the equivalent-math jnp paths."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import eval_filter, init_modal
+from repro.core.transfer import impulse_from_tf, tf_from_modal
+from repro.kernels.ssm_decode.ref import ssm_decode_ref
+
+
+def main(out):
+    ssm = init_modal(jax.random.PRNGKey(0), (64,), 8, r_minmax=(0.5, 0.9))
+    for L in (2048, 16384):
+        f1 = jax.jit(lambda s: eval_filter(s, L))
+        dt = timeit(f1, ssm, warmup=1, iters=3)
+        out(row(f"lemma3.1/modal_eval_O(dL)/L{L}", dt * 1e6, ""))
+        a, b = tf_from_modal(ssm.poles(), ssm.residues(), ssm.h0)
+        f2 = jax.jit(lambda a, b, h0: impulse_from_tf(a, b, h0, L))
+        dt = timeit(f2, a, b, ssm.h0, warmup=1, iters=3)
+        out(row(f"lemmaA.6/rational_fft_O(LlogL)/L{L}", dt * 1e6, ""))
+    # fused decode step math at serving scale
+    B, C, d = 32, 2048, 8
+    args = (jax.random.normal(jax.random.PRNGKey(1), (B, C, d)),
+            jax.random.normal(jax.random.PRNGKey(2), (B, C, d)),
+            jax.random.normal(jax.random.PRNGKey(3), (B, C)),
+            jnp.log(jnp.full((C, d), 0.9)), jnp.zeros((C, d)),
+            jnp.ones((C, d)), jnp.zeros((C, d)), jnp.zeros((C,)))
+    f3 = jax.jit(ssm_decode_ref)
+    dt = timeit(f3, *args, warmup=2, iters=5)
+    out(row(f"prop3.3/ssm_decode_step/B{B}xC{C}xd{d}", dt * 1e6,
+            f"ns_per_state={dt*1e9/(B*C*d):.2f}"))

@@ -1,0 +1,42 @@
+"""Fig 5.4: generation cache memory vs number of generated tokens.
+
+Transformer kv-cache grows O(L); cached-conv Hyena grows O(L); the distilled
+recurrence is constant O(d). Measured as actual cache-tree bytes, plus the
+analytic footprint at the paper's 1.3B scale.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from benchmarks.models import build, hyena_cfg, transformer_cfg
+from repro.configs import get_config
+from repro.models.model import init_cache
+from repro.distributed.sharding import unzip
+
+BATCH = 8
+
+
+def _bytes(tree):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def main(out):
+    tcfg, hcfg = transformer_cfg(), hyena_cfg()
+    for K in (128, 512, 2048):
+        tkv, _ = unzip(init_cache(tcfg, BATCH, K))
+        hst, _ = unzip(init_cache(hcfg, BATCH, K))
+        out(row(f"fig5.4/transformer_kv/K{K}", 0.0,
+                f"cache_MB={_bytes(tkv)/1e6:.2f}"))
+        out(row(f"fig5.4/laughinghyena/K{K}", 0.0,
+                f"cache_MB={_bytes(hst)/1e6:.2f}"))
+    # analytic at paper scale (1.3B, batch 64, fp16): Sec. 5.4
+    cfg = get_config("multihyena-1.3b")
+    d = cfg.hyena.distill_order
+    state = 64 * cfg.n_layers * cfg.d_model * d * 2 * 2          # re+im fp16
+    conv = 64 * cfg.n_layers * 3 * cfg.d_model * 2 * 2
+    out(row("fig5.4/analytic_1.3b_b64/laughinghyena", 0.0,
+            f"cache_MB={(state+conv)/1e6:.0f}"))
+    for K in (256, 1024, 4096):
+        kv = 64 * cfg.n_layers * K * 2 * cfg.n_kv_heads * cfg.hd * 2
+        out(row(f"fig5.4/analytic_1.3b_b64/transformer_K{K}", 0.0,
+                f"cache_MB={kv/1e6:.0f}"))

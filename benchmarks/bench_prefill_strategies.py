@@ -1,0 +1,25 @@
+"""Sec. 3.4: fast pre-filling strategies — recurrent O(dT), parallel scan
+O(d log T), Vandermonde matmul O(dT, MXU), FFT O~(T) (Prop. 3.2)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import (init_modal, prefill_fft, prefill_recurrent,
+                        prefill_scan, prefill_vandermonde)
+
+CH, D_MODES = 128, 8
+
+
+def main(out):
+    ssm = init_modal(jax.random.PRNGKey(0), (CH,), D_MODES,
+                     r_minmax=(0.5, 0.95))
+    for T in (512, 4096, 16384):
+        u = jax.random.normal(jax.random.PRNGKey(1), (CH, T))
+        for name, fn in (("recurrent", prefill_recurrent),
+                         ("scan", prefill_scan),
+                         ("vandermonde", prefill_vandermonde),
+                         ("fft", prefill_fft)):
+            jfn = jax.jit(fn)
+            dt = timeit(jfn, ssm, u, warmup=1, iters=3)
+            out(row(f"sec3.4/prefill_{name}/T{T}", dt * 1e6,
+                    f"us_per_tok={dt*1e6/T:.2f}"))

@@ -1,0 +1,29 @@
+"""Fig 5.3: throughput scaling in prompt length T (fixed batch).
+
+LaughingHyena prefills via convolutions (O~(T)); the Transformer's attention
+prefill is O(T^2).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from benchmarks.models import build, hyena_cfg, transformer_cfg
+from repro.serve.engine import GenerationEngine
+
+K_GEN, BATCH = 32, 8
+
+
+def main(out):
+    tcfg, hcfg = transformer_cfg(), hyena_cfg()
+    tparams = build(tcfg)
+    hparams = build(hcfg, distill=True)
+    for T in (128, 512, 2048):
+        for name, cfg, params in (("transformer", tcfg, tparams),
+                                  ("laughinghyena", hcfg, hparams)):
+            eng = GenerationEngine(params, cfg, max_len=T + K_GEN)
+            prompt = jnp.ones((BATCH, T), jnp.int32)
+            dt = timeit(lambda: eng.generate_scanned(jax.random.PRNGKey(0),
+                                                     prompt, K_GEN),
+                        warmup=1, iters=3)
+            out(row(f"fig5.3/{name}/T{T}", dt * 1e6,
+                    f"tok_s={BATCH*K_GEN/dt:.0f}"))

@@ -1,0 +1,26 @@
+"""Sec. 5.4 "SSM state dimension and throughput": decode-step latency vs the
+distillation order d (paper: <2% effect below d=100)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from benchmarks.models import build, hyena_cfg
+from repro.models.model import decode_step, init_cache
+from repro.distributed.sharding import unzip
+
+BATCH = 16
+
+
+def main(out):
+    base = None
+    for d in (4, 8, 16, 32, 64):
+        cfg = hyena_cfg(distill_order=d)
+        params = build(cfg, distill=False)     # random modal params: same cost
+        cache, _ = unzip(init_cache(cfg, BATCH, 64))
+        tok = jnp.ones((BATCH, 1), jnp.int32)
+        step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+        dt = timeit(step, params, cache, tok, warmup=2, iters=10)
+        if base is None:
+            base = dt
+        out(row(f"sec5.4/state_dim/d{d}", dt * 1e6,
+                f"rel={dt/base:.2f}"))

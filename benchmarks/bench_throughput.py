@@ -1,0 +1,56 @@
+"""Fig 1.1: generation throughput across batch sizes.
+
+Transformer (kv cache) vs Hyena cached-conv (Lemma 2.1) vs LaughingHyena
+(distilled recurrence). Workload: prompt 128, generate 64.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from benchmarks.models import build, hyena_cfg, transformer_cfg
+from repro.serve.engine import CachedConvHyenaEngine, GenerationEngine
+
+T_PROMPT, K_GEN = 128, 64
+
+
+def _throughput_engine(cfg, params, batch):
+    eng = GenerationEngine(params, cfg, max_len=T_PROMPT + K_GEN)
+    prompt = jnp.ones((batch, T_PROMPT), jnp.int32)
+
+    def run():
+        return eng.generate_scanned(jax.random.PRNGKey(0), prompt, K_GEN)
+
+    dt = timeit(run, warmup=1, iters=3)
+    return batch * K_GEN / dt, dt
+
+
+def _throughput_cached_conv(cfg, params, batch):
+    eng = CachedConvHyenaEngine(params, cfg, max_len=T_PROMPT + K_GEN)
+    caches = eng.init_caches(batch)
+    tok = jnp.ones((batch, 1), jnp.int32)
+
+    def run():
+        c = caches
+        out = None
+        for i in range(K_GEN):
+            c, out = eng.step(c, tok, jnp.asarray(T_PROMPT + i, jnp.int32))
+        return out
+
+    dt = timeit(run, warmup=1, iters=3)
+    return batch * K_GEN / dt, dt
+
+
+def main(out):
+    tcfg = transformer_cfg()
+    tparams = build(tcfg)
+    hcfg = hyena_cfg()
+    hparams = build(hcfg, distill=True)
+    for batch in (1, 8, 32):
+        tp, dt = _throughput_engine(tcfg, tparams, batch)
+        out(row(f"fig1.1/transformer_kv/b{batch}", dt * 1e6,
+                f"tok_s={tp:.0f}"))
+        tp, dt = _throughput_engine(hcfg, hparams, batch)
+        out(row(f"fig1.1/laughinghyena/b{batch}", dt * 1e6, f"tok_s={tp:.0f}"))
+        tp, dt = _throughput_cached_conv(hcfg, hparams, batch)
+        out(row(f"fig1.1/hyena_cached_conv/b{batch}", dt * 1e6,
+                f"tok_s={tp:.0f}"))

@@ -1,0 +1,40 @@
+"""Matched-size model pairs for the paper's benchmark comparisons.
+
+The paper benchmarks Transformers vs Hyena vs LaughingHyena at equal sizes
+(Sec. 5.4). On this CPU container we use reduced widths; the comparison
+STRUCTURE (kv-cache vs cached-conv vs recurrent) is identical to Fig 1.1.
+"""
+import jax
+
+from repro.configs.base import ATTN, HYENA, HyenaConfig, ModelConfig
+from repro.core.distill import distill_model
+from repro.distributed.sharding import unzip
+from repro.models.model import init_params
+
+D, L_LAYERS, VOCAB = 128, 4, 512
+
+
+def transformer_cfg() -> ModelConfig:
+    return ModelConfig(name="bench-transformer", family="dense",
+                       n_layers=L_LAYERS, d_model=D, n_heads=4, n_kv_heads=4,
+                       head_dim=32, d_ff=4 * D, vocab=VOCAB, act="gelu",
+                       norm="layernorm", pattern=(ATTN,), max_seq=65536,
+                       dtype="float32")
+
+
+def hyena_cfg(distill_order: int = 16) -> ModelConfig:
+    return ModelConfig(name="bench-multihyena", family="lcsm",
+                       n_layers=L_LAYERS, d_model=D, n_heads=4, n_kv_heads=4,
+                       head_dim=32, d_ff=4 * D, vocab=VOCAB, act="gelu",
+                       norm="layernorm", pattern=(HYENA,),
+                       hyena=HyenaConfig(n_filter_heads=4, filter_order=32,
+                                         filter_emb=17,
+                                         distill_order=distill_order),
+                       max_seq=65536, dtype="float32")
+
+
+def build(cfg, key=0, distill: bool = False, distill_len: int = 1024):
+    params, _ = unzip(init_params(jax.random.PRNGKey(key), cfg))
+    if distill:
+        params, _ = distill_model(params, cfg, steps=800, L=distill_len)
+    return params

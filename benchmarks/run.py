@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig1.1]
+
+Prints ``name,us_per_call,derived`` CSV rows. All models are width-reduced
+(CPU container); the comparison *structure* matches the paper's figures.
+"""
+import argparse
+import sys
+import traceback
+
+sys.path.insert(0, "src")
+
+from benchmarks import (bench_distill, bench_kernels, bench_memory,
+                        bench_prefill_strategies, bench_prompt_scaling,
+                        bench_state_dim, bench_throughput)
+
+SUITES = {
+    "fig1.1_throughput": bench_throughput.main,
+    "fig5.3_prompt_scaling": bench_prompt_scaling.main,
+    "fig5.4_memory": bench_memory.main,
+    "sec5.4_state_dim": bench_state_dim.main,
+    "sec3.4_prefill": bench_prefill_strategies.main,
+    "fig5.2_distill": bench_distill.main,
+    "kernels": bench_kernels.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    rows = []
+
+    def out(r):
+        print(r, flush=True)
+        rows.append(r)
+
+    failures = 0
+    for name, fn in SUITES.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn(out)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Associative recall with multi-head Hyena (paper Thm 4.1 / App. E.1).
+
+  PYTHONPATH=src python examples/associative_recall.py
+
+Trains two 2-layer models on the key-value recall task and compares accuracy:
+  * MultiHyena with M=4 heads using the literal Sec.-4 outer-product operator
+  * single-head Hyena (elementwise gating)
+The multi-head model should reach higher accuracy at matched width — the
+empirical support for Theorem 4.1 (Table E.1).
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.hyena import fft_conv, outer_product_op
+from repro.models.layers import apply_norm, init_norm
+from repro.distributed.sharding import Param, unzip
+from repro.optim.adamw import adamw_init, adamw_update
+
+VOCAB = 24           # keys + values
+D, L, HEADS = 32, 64, 4
+STEPS, BATCH = 400, 32
+
+
+def make_batch(key, batch):
+    """Sequences of (k1 v1 k2 v2 ... q) with q one of the seen keys."""
+    n_pairs = (L - 1) // 2
+    kk, kv, kq = jax.random.split(key, 3)
+    keys = jax.random.randint(kk, (batch, n_pairs), 0, VOCAB // 2)
+    vals = jax.random.randint(kv, (batch, n_pairs), VOCAB // 2, VOCAB)
+    qi = jax.random.randint(kq, (batch,), 0, n_pairs)
+    seq = jnp.zeros((batch, L), jnp.int32)
+    seq = seq.at[:, 0:2 * n_pairs:2].set(keys)
+    seq = seq.at[:, 1:2 * n_pairs:2].set(vals)
+    query = jnp.take_along_axis(keys, qi[:, None], axis=1)[:, 0]
+    target = jnp.take_along_axis(vals, qi[:, None], axis=1)[:, 0]
+    seq = seq.at[:, -1].set(query)
+    return seq, target
+
+
+def init_model(key, heads):
+    ks = jax.random.split(key, 8)
+    scale = 1 / np.sqrt(D)
+    p = {
+        "emb": jnp.asarray(0.02) * jax.random.normal(ks[0], (VOCAB, D)),
+        "out": scale * jax.random.normal(ks[6], (D, VOCAB)),
+    }
+    for l in (0, 1):
+        p[f"wq{l}"] = scale * jax.random.normal(ks[1 + 2 * l], (D, D))
+        p[f"wk{l}"] = scale * jax.random.normal(ks[2 + 2 * l], (D, D))
+        p[f"wv{l}"] = scale * jax.random.normal(ks[5 + l], (D, D))
+        p[f"wo{l}"] = scale * jax.random.normal(ks[7], (D, D))
+        p[f"h{l}"] = 0.1 * jax.random.normal(ks[7], (heads, L))
+    return p
+
+
+def forward(p, seq, heads):
+    x = p["emb"][seq]
+    for l in (0, 1):
+        q = x @ p[f"wq{l}"]
+        k = x @ p[f"wk{l}"]
+        v = x @ p[f"wv{l}"]
+        if heads > 1:
+            y = outer_product_op(q, k, v, p[f"h{l}"], heads)
+        else:
+            y = q * fft_conv(k * v, p[f"h{l}"])
+        x = x + y @ p[f"wo{l}"]
+    return x[:, -1, :] @ p["out"]
+
+
+def train(heads, seed=0):
+    p = init_model(jax.random.PRNGKey(seed), heads)
+    opt = adamw_init(p)
+
+    @jax.jit
+    def step(p, opt, seq, tgt, i):
+        def loss_fn(p):
+            logits = forward(p, seq, heads)
+            return jnp.mean(jax.nn.logsumexp(logits, -1) -
+                            jnp.take_along_axis(logits, tgt[:, None], 1)[:, 0])
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, opt, _ = adamw_update(g, opt, p, lr=3e-3, weight_decay=0.0)
+        return p, opt, loss
+
+    key = jax.random.PRNGKey(seed + 100)
+    for i in range(STEPS):
+        key, sub = jax.random.split(key)
+        seq, tgt = make_batch(sub, BATCH)
+        p, opt, loss = step(p, opt, seq, tgt, i)
+    # eval
+    seq, tgt = make_batch(jax.random.PRNGKey(999), 256)
+    acc = float(jnp.mean(jnp.argmax(forward(p, seq, heads), -1) == tgt))
+    return acc, float(loss)
+
+
+if __name__ == "__main__":
+    acc_multi, _ = train(heads=HEADS)
+    acc_single, _ = train(heads=1)
+    print(f"associative recall (vocab {VOCAB}, len {L}, width {D}):")
+    print(f"  MultiHyena ({HEADS} heads, outer-product op): acc = {acc_multi:.2%}")
+    print(f"  single-head Hyena (elementwise):              acc = {acc_single:.2%}")
+    assert acc_multi >= acc_single - 0.05

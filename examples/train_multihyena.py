@@ -1,0 +1,75 @@
+"""End-to-end training driver: pretrain a MultiHyena LM with the full
+production substrate — sharded data pipeline, AdamW + cosine, checkpointing,
+preemption-safe restart, straggler watchdog.
+
+Full deliverable setting (paper Sec. 5.1-style run, scaled to this host):
+
+  PYTHONPATH=src python examples/train_multihyena.py \
+      --d-model 512 --layers 12 --steps 300 --batch 8 --seq 512
+
+That instantiates a ~45M-param MultiHyena (8 heads). On a real v5e pod the
+same driver launches via repro.launch.train with the production mesh. A
+--tiny flag runs a 2-minute CPU version.
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs.base import HYENA, HyenaConfig, ModelConfig
+from repro.data.pipeline import SyntheticLM, make_batches
+from repro.distributed.sharding import unzip
+from repro.models.model import init_params
+from repro.train.checkpoint import Checkpointer
+from repro.train.loop import train
+from repro.train.train_step import init_opt, make_train_step
+
+
+def build_cfg(d_model, layers, vocab):
+    return ModelConfig(
+        name=f"multihyena-{d_model}x{layers}", family="lcsm",
+        n_layers=layers, d_model=d_model, n_heads=8, n_kv_heads=8,
+        head_dim=d_model // 8, d_ff=4 * d_model, vocab=vocab, act="gelu",
+        norm="layernorm", pattern=(HYENA,),
+        hyena=HyenaConfig(n_filter_heads=8, filter_order=64, filter_emb=33),
+        tie_embeddings=True, max_seq=65536, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", type=str, default="/tmp/multihyena_run")
+    ap.add_argument("--tiny", action="store_true")
+    args = ap.parse_args()
+    if args.tiny:
+        args.d_model, args.layers, args.vocab = 128, 4, 512
+        args.steps, args.seq = 60, 128
+
+    cfg = build_cfg(args.d_model, args.layers, args.vocab)
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  {n/1e6:.1f}M params")
+    opt = init_opt(params)
+    src = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, None, base_lr=args.lr,
+                                      warmup=args.steps // 10,
+                                      total_steps=args.steps, remat="none"))
+    ck = Checkpointer(args.ckpt, keep=2)
+    start = (ck.latest_step() + 1) if ck.latest_step() is not None else 0
+    out = train(step_fn, params, opt, make_batches(src, start_step=start),
+                steps=args.steps, ckpt=ck, ckpt_every=50, log_every=10)
+    print(f"done at step {out['step']}: loss {float(out['metrics']['loss']):.4f} "
+          f"(stragglers flagged: {out['straggler_count']})")
+    print(f"checkpoints: {ck.all_steps()} in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Paper-claim validation runs (EXPERIMENTS.md 'Reproduction' section).
+
+  PYTHONPATH=src python experiments/run_paper_validation.py
+
+1. Table 5.1 proxy  — MultiHyena (8 tied filter heads) vs per-channel Hyena
+                      pretraining loss at matched size, 300 steps synthetic.
+2. Fig 5.2          — distillation error vs order on the TRAINED model's
+                      filters + Hankel spectrum decay.
+3. Fig 5.1 / T 5.2  — relative logit error of distilled vs base model at
+                      orders {4, 8, 16, 32} (the paper's quality cliff at
+                      order < 16 should reproduce).
+4. Sec 3.4          — pre-filling strategy agreement (numerical).
+"""
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HYENA, HyenaConfig, ModelConfig
+from repro.core.distill import distill_filters, distill_model
+from repro.core.hankel import hankel_singular_values
+from repro.core.modal import eval_filter
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.sharding import unzip
+from repro.models.hyena import materialize_filters
+from repro.models.model import decode_step, forward, init_params, prefill
+from repro.train.train_step import init_opt, make_train_step
+
+RESULTS = {}
+
+
+def make_cfg(heads):
+    return ModelConfig(
+        name=f"val-hyena-m{heads}", family="lcsm", n_layers=4, d_model=128,
+        n_heads=8, n_kv_heads=8, head_dim=16, d_ff=512, vocab=512, act="gelu",
+        norm="layernorm", pattern=(HYENA,),
+        hyena=HyenaConfig(n_filter_heads=heads, filter_order=32,
+                          filter_emb=17, distill_order=16),
+        tie_embeddings=True, max_seq=65536, dtype="float32")
+
+
+def train_model(cfg, steps=300, seed=0):
+    params, _ = unzip(init_params(jax.random.PRNGKey(seed), cfg))
+    opt = init_opt(params)
+    src = SyntheticLM(vocab=cfg.vocab, seq_len=128, global_batch=8, seed=seed)
+    step = jax.jit(make_train_step(cfg, None, base_lr=2e-3, warmup=20,
+                                   total_steps=steps, remat="none"))
+    loss = None
+    for i in range(steps):
+        params, opt, m = step(params, opt,
+                              {"tokens": jnp.asarray(src.batch(i))},
+                              jnp.asarray(i))
+        loss = float(m["loss"])
+    return params, loss
+
+
+# 1 ------------------------------------------------------------------------
+print("== Table 5.1 proxy: multi-head (tied) vs per-channel filters ==")
+t0 = time.time()
+multi_params, multi_loss = train_model(make_cfg(8))
+_, chan_loss = train_model(make_cfg(128))
+print(f"MultiHyena (M=8 tied):     loss {multi_loss:.4f}")
+print(f"Hyena (per-channel M=D):   loss {chan_loss:.4f}   ({time.time()-t0:.0f}s)")
+RESULTS["table5.1"] = {"multihyena_loss": multi_loss, "hyena_loss": chan_loss}
+
+# 2 ------------------------------------------------------------------------
+print("\n== Fig 5.2: distillation error vs order (trained filters) ==")
+cfg = make_cfg(8)
+fp = jax.tree.map(lambda x: x[0], multi_params["groups"]["l0"]["mix"]["filter"])
+h, _ = materialize_filters(fp, 512, cfg.hyena)
+sv = hankel_singular_values(h)
+print("Hankel sigma_n/sigma_1 at n=4,8,16,32:",
+      [f"{float(jnp.max(sv[:, n] / sv[:, 0])):.1e}" for n in (4, 8, 16, 32)])
+RESULTS["fig5.2"] = {"hankel_decay": {str(n): float(jnp.max(sv[:, n]/sv[:, 0]))
+                                      for n in (4, 8, 16, 32)}, "err": {}}
+for order in (4, 8, 16, 32):
+    ssm, _ = distill_filters(h, order // 2, steps=2000)
+    err = jnp.linalg.norm(eval_filter(ssm, 512) - h, axis=-1) / \
+        jnp.linalg.norm(h, axis=-1)
+    print(f"order {order:3d}: rel l2 err (min/mean/max) "
+          f"{float(jnp.min(err)):.2e} {float(jnp.mean(err)):.2e} "
+          f"{float(jnp.max(err)):.2e}")
+    RESULTS["fig5.2"]["err"][str(order)] = float(jnp.max(err))
+
+# 3 ------------------------------------------------------------------------
+print("\n== Fig 5.1 / Table 5.2: logit error vs distillation order ==")
+toks = jax.random.randint(jax.random.PRNGKey(3), (2, 96), 0, cfg.vocab)
+full, _ = forward(multi_params, toks, cfg)
+scale = float(jnp.max(jnp.abs(full)))
+RESULTS["fig5.1"] = {}
+for order in (4, 8, 16, 32):
+    pd, _ = distill_model(multi_params, cfg, d=order, steps=2500, L=512)
+    cache, last = prefill(pd, toks[:, :64], cfg, max_len=96)
+    errs = [float(jnp.max(jnp.abs(last - full[:, 63])))]
+    for t in range(64, 96):
+        cache, lg = decode_step(pd, cache, toks[:, t:t + 1], cfg)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    rel = max(errs) / scale
+    print(f"order {order:3d}: relative logit error {rel:.4f}")
+    RESULTS["fig5.1"][str(order)] = rel
+
+# 4 ------------------------------------------------------------------------
+print("\n== Sec 3.4: pre-filling strategies agree ==")
+from repro.core import (init_modal, prefill_fft, prefill_recurrent,
+                        prefill_scan, prefill_vandermonde)
+ssm = init_modal(jax.random.PRNGKey(0), (16,), 8, r_minmax=(0.5, 0.95))
+u = jax.random.normal(jax.random.PRNGKey(1), (16, 2048))
+xr = prefill_recurrent(ssm, u)
+s = float(jnp.max(jnp.abs(xr)))
+agree = {}
+for name, fn in (("scan", prefill_scan), ("vandermonde", prefill_vandermonde),
+                 ("fft", prefill_fft)):
+    err = float(jnp.max(jnp.abs(fn(ssm, u) - xr))) / s
+    agree[name] = err
+    print(f"{name:12s} vs recurrent: rel err {err:.2e}")
+RESULTS["sec3.4"] = agree
+
+json.dump(RESULTS, open("experiments/paper_validation.json", "w"), indent=1)
+print("\nwrote experiments/paper_validation.json")

@@ -1,0 +1,26 @@
+"""Architecture registry. Importing this package registers all configs."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, SHAPES, REGISTRY, get_config, list_archs,
+    smoke_config, cell_applicable,
+)
+
+# side-effect registration — one module per assigned architecture
+from repro.configs import mistral_nemo_12b   # noqa: F401
+from repro.configs import llama3_2_3b        # noqa: F401
+from repro.configs import gemma_7b           # noqa: F401
+from repro.configs import starcoder2_3b      # noqa: F401
+from repro.configs import qwen2_vl_72b       # noqa: F401
+from repro.configs import whisper_medium     # noqa: F401
+from repro.configs import recurrentgemma_9b  # noqa: F401
+from repro.configs import granite_moe_3b_a800m  # noqa: F401
+from repro.configs import dbrx_132b          # noqa: F401
+from repro.configs import mamba2_130m        # noqa: F401
+from repro.configs import multihyena_153m    # noqa: F401
+from repro.configs import h3_125m            # noqa: F401
+
+ASSIGNED = [
+    "mistral-nemo-12b", "llama3.2-3b", "gemma-7b", "starcoder2-3b",
+    "qwen2-vl-72b", "whisper-medium", "recurrentgemma-9b",
+    "granite-moe-3b-a800m", "dbrx-132b", "mamba2-130m",
+]
+PAPER_ARCHS = ["multihyena-153m", "multihyena-1.3b", "h3-125m"]

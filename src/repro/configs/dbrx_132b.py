@@ -1,0 +1,28 @@
+"""DBRX-132B [hf:databricks/dbrx-base; unverified].
+
+Fine-grained MoE: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 per expert,
+16 experts top-4, vocab=100352.
+"""
+from repro.configs.base import ATTN, MLP_MOE, MoEConfig, ModelConfig, register
+
+
+@register
+def dbrx_132b() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b",
+        family="moe",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=10752,
+        vocab=100352,
+        act="swiglu",
+        norm="rmsnorm",
+        rope_theta=500_000.0,
+        pattern=(ATTN,),
+        mlp_kind=MLP_MOE,
+        moe=MoEConfig(n_experts=16, top_k=4),
+        max_seq=32768,
+    )

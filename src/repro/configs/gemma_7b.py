@@ -1,0 +1,27 @@
+"""Gemma-7B [arXiv:2403.08295].
+
+Dense decoder, 28L d_model=3072 16H (kv=16, i.e. MHA at 7b) d_ff=24576
+vocab=256000, GeGLU, head_dim=256, tied embeddings.
+"""
+from repro.configs.base import ATTN, ModelConfig, register
+
+
+@register
+def gemma_7b() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-7b",
+        family="dense",
+        n_layers=28,
+        d_model=3072,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=256,
+        d_ff=24576,
+        vocab=256000,
+        act="geglu",
+        norm="rmsnorm",
+        rope_theta=10000.0,
+        tie_embeddings=True,
+        pattern=(ATTN,),
+        max_seq=8192,
+    )

@@ -1,0 +1,29 @@
+"""Granite-MoE-3B-a800m [hf:ibm-granite/granite-3.0 family].
+
+MoE: 32L d_model=1536 24H (GQA kv=8) d_ff=512 per expert, 40 experts
+top-8, vocab=49155.
+"""
+from repro.configs.base import ATTN, MLP_MOE, MoEConfig, ModelConfig, register
+
+
+@register
+def granite_moe_3b_a800m() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m",
+        family="moe",
+        n_layers=32,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=512,
+        vocab=49155,
+        act="swiglu",
+        norm="rmsnorm",
+        rope_theta=10000.0,
+        pattern=(ATTN,),
+        mlp_kind=MLP_MOE,
+        moe=MoEConfig(n_experts=40, top_k=8),
+        tie_embeddings=True,
+        max_seq=131072,
+    )

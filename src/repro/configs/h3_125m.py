@@ -1,0 +1,34 @@
+"""H3-125M (hybrid) — the paper's other LCSM family [Fu et al., 2023].
+
+12L d_model=768 12H d_ff=3072 vocab=50264; H3 blocks parameterize the long
+filter as a diagonal SSM (64 modes) with a width-4 shift conv; following the
+paper's benchmark setup ("hybrid H3-attention model with 2 attention
+layers"), attention sits at layers 1 and 7 (period-6 pattern).
+
+Distilling H3 is model-order reduction (paper Sec. 3: "the term distillation
+becomes analogous to model-order reduction"); App. E.3 compares modal and
+balanced truncation on exactly this family.
+"""
+from repro.configs.base import ATTN, HYENA, HyenaConfig, ModelConfig, register
+
+
+@register
+def h3_125m() -> ModelConfig:
+    return ModelConfig(
+        name="h3-125m",
+        family="lcsm",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        head_dim=64,
+        d_ff=3072,
+        vocab=50264,
+        act="gelu",
+        norm="layernorm",
+        pattern=(HYENA, ATTN, HYENA, HYENA, HYENA, HYENA),
+        hyena=HyenaConfig(n_filter_heads=12, filter_param="ssm", ssm_state=64,
+                          short_conv=4, distill_order=8),
+        tie_embeddings=True,
+        max_seq=1_048_576,
+    )

@@ -1,0 +1,26 @@
+"""Llama-3.2-3B (small llama3) [hf:meta-llama/Llama-3.2; unverified].
+
+Dense decoder, 28L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+"""
+from repro.configs.base import ATTN, ModelConfig, register
+
+
+@register
+def llama3_2_3b() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b",
+        family="dense",
+        n_layers=28,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab=128256,
+        act="swiglu",
+        norm="rmsnorm",
+        rope_theta=500_000.0,
+        tie_embeddings=True,
+        pattern=(ATTN,),
+        max_seq=131072,
+    )

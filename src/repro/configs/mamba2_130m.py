@@ -1,0 +1,27 @@
+"""Mamba2-130M [arXiv:2405.21060].
+
+SSM (attention-free): 24L d_model=768, SSD with d_state=128, expand=2,
+head_dim=64, vocab=50280. Sub-quadratic: runs long_500k.
+"""
+from repro.configs.base import MAMBA2, ModelConfig, SSMConfig, register
+
+
+@register
+def mamba2_130m() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m",
+        family="ssm",
+        n_layers=24,
+        d_model=768,
+        n_heads=24,        # SSD heads = expand*d_model/head_dim = 24
+        n_kv_heads=1,
+        head_dim=64,
+        d_ff=0,            # attention-free, no separate MLP (Mamba block only)
+        vocab=50280,
+        act="swiglu",
+        norm="rmsnorm",
+        pattern=(MAMBA2,),
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+        tie_embeddings=True,
+        max_seq=1_048_576,
+    )

@@ -1,0 +1,26 @@
+"""Mistral-Nemo-12B [hf:mistralai/Mistral-Nemo-Base-2407].
+
+Dense decoder, 40L d_model=5120 32H (GQA kv=8) head_dim=128 d_ff=14336
+vocab=131072, 128k context, SwiGLU, RoPE theta=1e6.
+"""
+from repro.configs.base import ATTN, ModelConfig, register
+
+
+@register
+def mistral_nemo_12b() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-nemo-12b",
+        family="dense",
+        n_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab=131072,
+        act="swiglu",
+        norm="rmsnorm",
+        rope_theta=1_000_000.0,
+        pattern=(ATTN,),
+        max_seq=131072,
+    )

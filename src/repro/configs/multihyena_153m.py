@@ -1,0 +1,54 @@
+"""MultiHyena-153M — the paper's own architecture (Sec. 4 / Sec. 5.1).
+
+LCSM: 18L d_model=864, 8 tied long-convolution filter heads, GPT-ish MLP,
+vocab=50304 (GPT-NeoX tokenizer, as in the Hyena/Pile setup of [2]).
+This is the model LaughingHyena distillation targets; after distillation
+each long filter becomes an order-16 diagonal SSM enabling O(1) decode,
+so it runs the long_500k cell.
+"""
+from repro.configs.base import HYENA, HyenaConfig, ModelConfig, register
+
+
+@register
+def multihyena_153m() -> ModelConfig:
+    return ModelConfig(
+        name="multihyena-153m",
+        family="lcsm",
+        n_layers=18,
+        d_model=864,
+        n_heads=8,            # qkv projection heads == filter heads
+        n_kv_heads=8,
+        head_dim=108,
+        d_ff=3456,
+        vocab=50304,
+        act="gelu",
+        norm="layernorm",
+        pattern=(HYENA,),
+        hyena=HyenaConfig(n_filter_heads=8, filter_order=64, filter_emb=33,
+                          short_conv=3, sine_freq=4.0, distill_order=16),
+        tie_embeddings=True,
+        max_seq=1_048_576,
+    )
+
+
+@register
+def multihyena_1_3b() -> ModelConfig:
+    """1.3B MultiHyena used for the paper's throughput headline (Fig 1.1)."""
+    return ModelConfig(
+        name="multihyena-1.3b",
+        family="lcsm",
+        n_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=8192,
+        vocab=50304,
+        act="gelu",
+        norm="layernorm",
+        pattern=(HYENA,),
+        hyena=HyenaConfig(n_filter_heads=16, filter_order=64, filter_emb=33,
+                          short_conv=3, sine_freq=4.0, distill_order=16),
+        tie_embeddings=True,
+        max_seq=1_048_576,
+    )

@@ -1,0 +1,31 @@
+"""Qwen2-VL-72B [arXiv:2409.12191].
+
+VLM: 80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064, M-RoPE.
+The vision frontend is a STUB: input_specs() provides precomputed patch
+embeddings that are concatenated ahead of the token embeddings.
+"""
+from repro.configs.base import ATTN, ModelConfig, register
+
+
+@register
+def qwen2_vl_72b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab=152064,
+        act="swiglu",
+        norm="rmsnorm",
+        rope_theta=1_000_000.0,
+        m_rope=True,
+        m_rope_sections=(16, 24, 24),
+        pattern=(ATTN,),
+        frontend="vision_stub",
+        frontend_len=256,
+        max_seq=131072,
+    )

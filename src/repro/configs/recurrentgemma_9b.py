@@ -1,0 +1,31 @@
+"""RecurrentGemma-9B (Griffin) [arXiv:2402.19427].
+
+Hybrid: 38L d_model=4096, pattern = (RG-LRU, RG-LRU, local-attn) repeating
+(1 attention : 2 recurrent), 16H local attention with kv=1 (MQA),
+d_ff=12288 GeGLU, vocab=256000, window=2048.
+Sub-quadratic: runs the long_500k decode cell.
+"""
+from repro.configs.base import LOCAL_ATTN, RGLRU, ModelConfig, RGLRUConfig, register
+
+
+@register
+def recurrentgemma_9b() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        vocab=256000,
+        act="geglu",
+        norm="rmsnorm",
+        rope_theta=10000.0,
+        pattern=(RGLRU, RGLRU, LOCAL_ATTN),
+        window=2048,
+        rglru=RGLRUConfig(d_conv=4, expand=1, window=2048),
+        tie_embeddings=True,
+        max_seq=1_048_576,
+    )

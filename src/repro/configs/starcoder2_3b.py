@@ -1,0 +1,26 @@
+"""StarCoder2-3B [arXiv:2402.19173].
+
+Dense decoder, 30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152,
+RoPE, layernorm, gelu MLP (non-gated).
+"""
+from repro.configs.base import ATTN, ModelConfig, register
+
+
+@register
+def starcoder2_3b() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-3b",
+        family="dense",
+        n_layers=30,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=12288,
+        vocab=49152,
+        act="gelu",
+        norm="layernorm",
+        rope_theta=100_000.0,
+        pattern=(ATTN,),
+        max_seq=16384,
+    )

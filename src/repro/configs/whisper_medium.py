@@ -1,0 +1,34 @@
+"""Whisper-medium [arXiv:2212.04356].
+
+Encoder-decoder: 24L decoder + 24L encoder, d_model=1024 16H (MHA)
+d_ff=4096 vocab=51865. The conv audio frontend is a STUB: input_specs()
+provides precomputed frame embeddings (1500 frames) for the encoder.
+Whisper uses learned absolute positions; we keep RoPE off by using
+theta=0 sentinel handled in the model (absolute embeddings).
+"""
+from repro.configs.base import ATTN, ModelConfig, register
+
+
+@register
+def whisper_medium() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium",
+        family="audio",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab=51865,
+        act="gelu",
+        norm="layernorm",
+        rope_theta=0.0,          # sentinel: learned absolute positions
+        pattern=(ATTN,),
+        enc_dec=True,
+        n_enc_layers=24,
+        frontend="audio_stub",
+        frontend_len=1500,
+        tie_embeddings=True,
+        max_seq=32768,
+    )

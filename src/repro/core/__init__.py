@@ -1,0 +1,23 @@
+"""LaughingHyena distillation: the paper's primary contribution.
+
+Pipeline (Fig. 3.1):
+  1. materialize the pre-trained long-convolution filters h (M, L)
+  2. analyze the Hankel spectrum to pick the target order d (Sec. 3.3)
+  3. fit a modal-form SSM by gradient interpolation (Sec. 3.2)
+  4. deploy: O(d) recurrent step + fast pre-filling (Sec. 3.4)
+"""
+from repro.core.modal import (  # noqa: F401
+    eval_filter, modal_step, init_modal, ModalSSM,
+)
+from repro.core.hankel import (  # noqa: F401
+    hankel_matrix, hankel_singular_values, suggest_order, aak_lower_bound,
+)
+from repro.core.distill import distill_filters, distill_model  # noqa: F401
+from repro.core.transfer import (  # noqa: F401
+    poly_from_roots, transfer_eval_fft, impulse_from_tf, get_tf_from_ss,
+    companion_from_tf, companion_step,
+)
+from repro.core.prefill import (  # noqa: F401
+    prefill_recurrent, prefill_scan, prefill_fft, prefill_vandermonde,
+)
+from repro.core.truncation import balanced_truncation, modal_truncation  # noqa: F401

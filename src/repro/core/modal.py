@@ -1,0 +1,86 @@
+"""Modal canonical form (paper Sec. 3.2, App. B.1).
+
+A distilled filter is parameterized by d poles and residues:
+
+    h_hat_t = Re[ sum_n R_n * lam_n^(t-1) ],  t >= 1;   h_hat_0 = h0.
+
+Poles in polar form lam_n = exp(log_a_n) * exp(i theta_n) (unconstrained —
+App. B.1 point 2: no stability constraint during distillation), residues in
+cartesian form, B = 1 (App. B.1 point 1). All arrays carry a leading "filter"
+batch shape (...,) so a whole model's filters distill in one jit.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ModalSSM(NamedTuple):
+    """Pytree of modal parameters; leading dims = filter batch, last = d."""
+    log_a: jnp.ndarray      # (..., d) log |lam|
+    theta: jnp.ndarray      # (..., d) phase
+    R_re: jnp.ndarray       # (..., d)
+    R_im: jnp.ndarray       # (..., d)
+    h0: jnp.ndarray         # (...,)  passthrough
+
+    @property
+    def order(self) -> int:
+        return self.log_a.shape[-1]
+
+    def poles(self) -> jnp.ndarray:
+        return jnp.exp(self.log_a + 1j * self.theta)
+
+    def residues(self) -> jnp.ndarray:
+        return self.R_re + 1j * self.R_im
+
+
+def init_modal(key, batch_shape: Tuple[int, ...], d: int,
+               r_minmax=(0.7, 0.999)) -> ModalSSM:
+    k1, k2, k3 = jax.random.split(key, 3)
+    mag = jax.random.uniform(k1, batch_shape + (d,), minval=r_minmax[0],
+                             maxval=r_minmax[1])
+    return ModalSSM(
+        log_a=jnp.log(mag),
+        theta=jax.random.uniform(k2, batch_shape + (d,), maxval=np.pi),
+        R_re=jax.random.normal(k3, batch_shape + (d,)) / d,
+        R_im=jnp.zeros(batch_shape + (d,)),
+        h0=jnp.zeros(batch_shape),
+    )
+
+
+def eval_filter(ssm: ModalSSM, L: int) -> jnp.ndarray:
+    """Materialize h_hat (.., L) including index 0. O(dL) (Lemma 3.1).
+
+    h_hat[0] = h0; h_hat[t] = Re sum_n R_n lam_n^(t-1) = sum_n a^(t-1) *
+    [R_re cos(theta (t-1)) - R_im sin(theta (t-1))] (Sec. 3.2).
+    """
+    t = jnp.arange(L - 1, dtype=jnp.float32)                    # exponent t-1
+    mag = jnp.exp(ssm.log_a[..., None] * t)                     # (.., d, L-1)
+    ang = ssm.theta[..., None] * t
+    tail = jnp.einsum("...d,...dl->...l", ssm.R_re, mag * jnp.cos(ang)) \
+        - jnp.einsum("...d,...dl->...l", ssm.R_im, mag * jnp.sin(ang))
+    return jnp.concatenate([ssm.h0[..., None], tail], axis=-1)
+
+
+def modal_step(ssm: ModalSSM, x_re, x_im, u):
+    """One recurrent step (Prop. 3.3, paper output convention).
+
+    y_t = Re[R . x_t] + h0 u_t ;  x_{t+1} = lam x_t + 1 u_t.
+    x_re/x_im: (.., d); u: (..,). Returns (y, x_re', x_im').
+    """
+    y = jnp.sum(ssm.R_re * x_re - ssm.R_im * x_im, axis=-1) + ssm.h0 * u
+    lr = jnp.exp(ssm.log_a) * jnp.cos(ssm.theta)
+    li = jnp.exp(ssm.log_a) * jnp.sin(ssm.theta)
+    nxr = lr * x_re - li * x_im + u[..., None]
+    nxi = lr * x_im + li * x_re
+    return y, nxr, nxi
+
+
+def effective_order(ssm: ModalSSM, tol: float = 1e-4) -> jnp.ndarray:
+    """Number of modes whose worst-case contribution |R|/(1-|lam|) > tol."""
+    a = jnp.exp(ssm.log_a)
+    infl = jnp.abs(ssm.residues()) / jnp.clip(1.0 - a, 1e-6)
+    return jnp.sum(infl > tol, axis=-1)

@@ -1,0 +1,95 @@
+"""Fast pre-filling strategies (paper Sec. 3.4).
+
+Given a prompt u (..., T) and a modal SSM, compute the post-prompt state
+x_T = sum_{j<T} lam^(T-1-j) u_j with one of four strategies with different
+time/memory trade-offs (Lemma 2.2, Prop. 3.2):
+
+  recurrent   — O(dT) sequential scan, O(d) memory
+  scan        — associative scan, O(d log T) parallel time, O(dT) memory
+  vandermonde — O(dT) as one (d x T) matmul; MXU-friendly (our TPU adaptation)
+  fft         — O~(T): companion-form state via circular deconvolution
+                (Prop. 3.2), then a d^2 basis change back to modal form
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modal import ModalSSM
+from repro.core.transfer import poly_from_roots
+
+
+def _lam(ssm: ModalSSM) -> jnp.ndarray:
+    return jnp.exp(ssm.log_a.astype(jnp.complex64) + 1j * ssm.theta)
+
+
+def prefill_recurrent(ssm: ModalSSM, u: jnp.ndarray) -> jnp.ndarray:
+    """u: (..., T) -> x_T (..., d) complex. Sequential scan."""
+    lam = _lam(ssm)
+
+    def body(x, ut):
+        return lam * x + ut[..., None], None
+
+    x0 = jnp.zeros(ssm.log_a.shape, jnp.complex64)
+    xT, _ = jax.lax.scan(body, x0, jnp.moveaxis(u.astype(jnp.complex64), -1, 0))
+    return xT
+
+
+def prefill_scan(ssm: ModalSSM, u: jnp.ndarray) -> jnp.ndarray:
+    """Parallel associative scan (Blelloch), O(d log T) depth, O(dT) memory."""
+    lam = _lam(ssm)
+    T = u.shape[-1]
+    a = jnp.broadcast_to(lam[..., None, :], u.shape + (lam.shape[-1],))
+    b = jnp.broadcast_to(u[..., None].astype(jnp.complex64),
+                         u.shape + (lam.shape[-1],))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, x = jax.lax.associative_scan(combine, (a, b), axis=-2)
+    return x[..., -1, :]
+
+
+def prefill_vandermonde(ssm: ModalSSM, u: jnp.ndarray) -> jnp.ndarray:
+    """x_T as a Vandermonde-basis matmul — one big MXU-friendly contraction."""
+    T = u.shape[-1]
+    expo = jnp.arange(T - 1, -1, -1, dtype=jnp.float32)
+    logl = ssm.log_a.astype(jnp.complex64) + 1j * ssm.theta
+    basis = jnp.exp(logl[..., None] * expo)                # (..., d, T)
+    return jnp.einsum("...dt,...t->...d", basis, u.astype(jnp.complex64))
+
+
+def prefill_fft(ssm: ModalSSM, u: jnp.ndarray) -> jnp.ndarray:
+    """Prop. 3.2: O~(T) FFT pre-filling.
+
+    nu = (1/p) * u computed by circular deconvolution (valid up to rho(A)^T
+    wrap-around, App. A.4), companion state x_T^comp = (nu_{T-1},...,nu_{T-d}),
+    then map to the modal state with the deflated-polynomial basis change
+    x_n = sum_i q_n[i] nu_{T-1-(d-1-i)} where q_n = p(z)/(z - lam_n).
+    """
+    lam = _lam(ssm)
+    d = lam.shape[-1]
+    T = u.shape[-1]
+    p = poly_from_roots(lam)                               # (..., d+1) monic
+    P = jnp.fft.fft(jnp.concatenate(
+        [p, jnp.zeros(p.shape[:-1] + (T - d - 1,), p.dtype)], axis=-1), axis=-1)
+    U = jnp.fft.fft(u.astype(jnp.complex64), axis=-1)
+    nu = jnp.fft.ifft(U / P, axis=-1)                      # (..., T)
+    # companion state: last d values of nu, newest first
+    xc = nu[..., -1:-(d + 1):-1]                           # (nu_{T-1},...,nu_{T-d})
+    # q_n(z) = p(z)/(z - lam_n) by synthetic division (coeffs descending)
+    def deflate(p_full, r):
+        def body(carry, coef):
+            q = coef + r * carry
+            return q, q
+        _, qs = jax.lax.scan(body, jnp.zeros_like(r),
+                             jnp.moveaxis(p_full[..., :-1], -1, 0))
+        return jnp.moveaxis(qs, 0, -1)                     # (..., d)
+
+    qn = jax.vmap(lambda rr: deflate(p, rr), in_axes=-1, out_axes=-2)(lam)
+    # modal x_n,T = sum_{i=0}^{d-1} q_n[i] * v_{T-1-i}  (q_n in z^-1 form)
+    return jnp.einsum("...ni,...i->...n", qn, xc)

@@ -1,0 +1,130 @@
+"""Transfer-function machinery (paper App. A).
+
+Rational form H(z) = (b_1 z^-1 + ... + b_d z^-d)/(1 + a_1 z^-1 + ... ) + h0,
+companion canonical realization (App. A.5), fast O~(L) evaluation on the
+roots of unity (Lemma A.6), state-space -> transfer-function conversion
+(App. A.6, Listing 1) and the O(d) companion recurrence (Lemma A.7,
+Listing 2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def poly_from_roots(roots: jnp.ndarray) -> jnp.ndarray:
+    """Monic polynomial coefficients from roots.
+
+    roots: (..., d) complex -> coeffs (..., d+1), c[0] = 1 (descending powers:
+    p(z) = z^d + c1 z^(d-1) + ... + cd). Sequential convolution; d is small.
+    """
+    d = roots.shape[-1]
+    batch = roots.shape[:-1]
+    c = jnp.zeros(batch + (d + 1,), roots.dtype).at[..., 0].set(1.0)
+    for n in range(d):
+        r = roots[..., n][..., None]
+        shifted = jnp.roll(c, 1, axis=-1).at[..., 0].set(0.0)
+        c = c - r * shifted
+    return c
+
+
+def tf_from_modal(lam: jnp.ndarray, R: jnp.ndarray, h0: jnp.ndarray,
+                  conjugate_complete: bool = True
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Modal (poles/residues) -> rational coefficients (a, b).
+
+    H(z) = h0 + sum_n R_n / (z - lam_n) = h0 + q(z)/p(z) with
+    q_n(z) = prod_{m != n} (z - lam_m);  q = sum_n R_n q_n (degree d-1).
+
+    The modal form h = Re[sum R lam^t] is the transfer function of the
+    conjugate-completed system {(lam, R/2)} U {(lam*, R*/2)} (App. B.1), so
+    with conjugate_complete=True (default) the returned coefficients describe
+    that real system of order 2d (real up to roundoff).
+    """
+    if conjugate_complete:
+        lam = jnp.concatenate([lam, jnp.conj(lam)], axis=-1)
+        R = jnp.concatenate([R / 2.0, jnp.conj(R) / 2.0], axis=-1)
+    d = lam.shape[-1]
+    a = poly_from_roots(lam)                               # (..., d+1)
+    # q_n via deflation: divide p by (z - lam_n) synthetically.
+    def deflate(a_full, r):
+        # synthetic division of monic poly (.., d+1) by (z - r) -> (.., d)
+        def body(carry, coef):
+            q = coef + r * carry
+            return q, q
+        init = jnp.zeros_like(r)
+        _, qs = jax.lax.scan(body, init, jnp.moveaxis(a_full[..., :-1], -1, 0))
+        return jnp.moveaxis(qs, 0, -1)                     # (..., d)
+
+    qn = jax.vmap(lambda rr: deflate(a, rr), in_axes=-1, out_axes=-2)(lam)
+    b = jnp.einsum("...n,...nk->...k", R, qn)              # (..., d)
+    return a, b
+
+
+def transfer_eval_fft(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                      L: int) -> jnp.ndarray:
+    """Evaluate H on the L roots of unity in O~(L) (Lemma A.6).
+
+    a: (..., d+1) monic denominator (descending powers of z); b: (..., d)
+    numerator of z^-1..z^-d. In z^-1 form: den = 1 + a1 z^-1 + ...;
+    num = b1 z^-1 + ... — zero-pad to L and FFT.
+    """
+    d = a.shape[-1] - 1
+    batch = a.shape[:-1]
+    den = jnp.zeros(batch + (L,), jnp.complex64).at[..., :d + 1].set(a)
+    num = jnp.zeros(batch + (L,), jnp.complex64).at[..., 1:d + 1].set(b)
+    Fd = jnp.fft.fft(den, axis=-1)
+    Fn = jnp.fft.fft(num, axis=-1)
+    return Fn / Fd + h0[..., None]
+
+
+def impulse_from_tf(a, b, h0, L: int) -> jnp.ndarray:
+    """Impulse response h[0..L-1] via inverse FFT of the frequency response.
+
+    Note: this is the L-periodic (circular) impulse response; for stable
+    systems the wrap-around error decays as rho(A)^L (App. A.4).
+    """
+    H = transfer_eval_fft(a, b, h0, L)
+    return jnp.real(jnp.fft.ifft(H, axis=-1))
+
+
+def get_tf_from_ss(A: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+                   h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """App. A.6 Listing 1: dense (A, B, C, h0) -> (a, b) coefficients.
+
+    a = poly(eig(A)); b = poly(eig(A - B C)) + (h0 - 1) a, then the strictly
+    proper numerator is recovered as beta_n = b_n - b_0 a_n with b_0 = h0.
+    Returns (a (d+1,), beta (d,)).
+    """
+    eigA = jnp.linalg.eigvals(A)
+    a = poly_from_roots(eigA)
+    eigABC = jnp.linalg.eigvals(A - jnp.outer(B, C))
+    b_full = poly_from_roots(eigABC) + (h0 - 1.0) * a      # simply-proper num
+    beta = b_full[1:] - b_full[0] * a[1:]
+    return a, beta
+
+
+def companion_from_tf(a: jnp.ndarray, beta: jnp.ndarray, h0: jnp.ndarray):
+    """App. A.5: companion canonical (A, B, C, h0) from (a, beta)."""
+    d = beta.shape[-1]
+    A = jnp.zeros((d, d), a.dtype)
+    A = A.at[0, :].set(-a[1:])
+    A = A.at[jnp.arange(1, d), jnp.arange(0, d - 1)].set(1.0)
+    B = jnp.zeros((d,), a.dtype).at[0].set(1.0)
+    C = beta
+    return A, B, C, h0
+
+
+def companion_step(x, u, alpha, beta, h0):
+    """Lemma A.7 / Listing 2: O(d) companion recurrence.
+
+    x: (..., d) state; u: (...,) input; alpha = a[1:], beta numerator.
+    Returns (x', y).
+    """
+    y = jnp.einsum("...d,...d->...", beta, x) + h0 * u
+    lr = u - jnp.einsum("...d,...d->...", alpha, x)
+    x = jnp.roll(x, 1, axis=-1).at[..., 0].set(lr)
+    return x, y

@@ -1,0 +1,69 @@
+"""Classical model-order-reduction baselines (paper App. E.3).
+
+Balanced truncation via Kung's Hankel-SVD algorithm (E.3.2, following [24])
+and modal truncation for diagonal SSMs (E.3.1). These are the baselines the
+paper compares gradient-based modal interpolation against.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distill import fit_residues
+from repro.core.hankel import hankel_matrix
+from repro.core.modal import ModalSSM
+
+
+def balanced_truncation(h: jnp.ndarray, d: int):
+    """E.3.2 steps 1-4: order-d balanced realization from impulse response.
+
+    h: (L,) single filter. Returns dense (A (d,d), B (d,), C (d,), h0) —
+    complex-free (real) balanced realization.
+    """
+    S = hankel_matrix(h).astype(jnp.float32)
+    U, s, Vt = jnp.linalg.svd(S, full_matrices=False)
+    sq = jnp.sqrt(s[:d] + 1e-30)
+    O = U[:, :d] * sq[None, :]                 # observability factor
+    Ct = Vt[:d, :] * sq[:, None]               # controllability factor
+    A = jnp.linalg.pinv(O[:-1, :]) @ O[1:, :]
+    B = Ct[:, 0]
+    C = O[0, :]
+    return A, B, C, h[0]
+
+
+def balanced_truncation_modal(h: jnp.ndarray, d: int) -> ModalSSM:
+    """Balanced truncation followed by diagonalization into modal form."""
+    A, B, C, h0 = balanced_truncation(h, d)
+    lam, V = jnp.linalg.eig(A)
+    Bt = jnp.linalg.solve(V, B.astype(V.dtype))
+    Ct = C.astype(V.dtype) @ V
+    R = Bt * Ct
+    return ModalSSM(
+        log_a=jnp.log(jnp.clip(jnp.abs(lam), 1e-8)).astype(jnp.float32),
+        theta=jnp.angle(lam).astype(jnp.float32),
+        R_re=jnp.real(R).astype(jnp.float32),
+        R_im=jnp.imag(R).astype(jnp.float32),
+        h0=jnp.asarray(h0, jnp.float32),
+    )
+
+
+def modal_truncation(ssm: ModalSSM, n: int, refit: bool = False,
+                     h: jnp.ndarray = None) -> ModalSSM:
+    """E.3.1: keep the n most influential modes of a diagonal SSM.
+
+    Modes ranked by the h-inf bound |R_i| / |1 - |lam_i|| (Eq. E.2).
+    With refit=True the kept residues are re-solved against h (linear LSQ).
+    """
+    a = jnp.exp(ssm.log_a)
+    infl = jnp.abs(ssm.residues()) / jnp.clip(jnp.abs(1.0 - a), 1e-6)
+    idx = jnp.argsort(-infl, axis=-1)[..., :n]
+    take = lambda arr: jnp.take_along_axis(arr, idx, axis=-1)
+    out = ModalSSM(take(ssm.log_a), take(ssm.theta), take(ssm.R_re),
+                   take(ssm.R_im), ssm.h0)
+    if refit and h is not None:
+        R = fit_residues(out.poles(), h)
+        out = out._replace(R_re=jnp.real(R).astype(jnp.float32),
+                           R_im=jnp.imag(R).astype(jnp.float32))
+    return out

@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (  # noqa: F401
+    Param, unzip, zip_specs, ShardingRules, TRAIN_RULES, SERVE_RULES,
+    resolve_spec, tree_specs, constrain,
+)

@@ -1,0 +1,19 @@
+"""Process-wide toggles.
+
+DRYRUN_UNROLL: XLA's cost_analysis counts a while-loop body ONCE regardless of
+trip count, which would silently undercount FLOPs/bytes of scanned layer
+stacks and chunked-attention loops in the roofline. The dry-run sets this flag
+to fully unroll structural scans (layer groups, attention kv blocks, SSD
+chunks) so the compiled module's cost analysis reflects a real step. Normal
+execution keeps scans rolled (compile-time friendly).
+"""
+DRYRUN_UNROLL = False
+
+
+def set_dryrun_unroll(v: bool) -> None:
+    global DRYRUN_UNROLL
+    DRYRUN_UNROLL = v
+
+
+def scan_unroll(length: int) -> int:
+    return length if DRYRUN_UNROLL else 1

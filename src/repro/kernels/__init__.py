@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel ships as a triple:
+  <name>/<name>.py — pl.pallas_call with explicit BlockSpec VMEM tiling
+  <name>/ops.py    — jit'd public wrapper (interpret mode on CPU)
+  <name>/ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels (TPU adaptations of the paper's inference hot-spots):
+  modal_filter    — materialize distilled filters h[t] = Re sum R lam^(t-1)
+                    (Lemma 3.1 O(dL) evaluation): the basis powers are
+                    generated blockwise in VMEM and contracted over modes.
+  ssm_decode      — fused modal-SSM decode step across channels (Prop. 3.3):
+                    state update + output reduction in one HBM pass. The
+                    decode step is purely memory-bound (state ~ B*D*d), so
+                    fusing the 5 elementwise/reduce stages is the win.
+  flash_attention — blocked causal GQA attention with online softmax (VMEM
+                    tiles, MXU-aligned block shapes). Used by the attention
+                    baselines the paper benchmarks against.
+"""
+from repro.kernels.modal_filter import ops as modal_filter_ops  # noqa: F401
+from repro.kernels.ssm_decode import ops as ssm_decode_ops      # noqa: F401
+from repro.kernels.flash_attention import ops as flash_attention_ops  # noqa: F401

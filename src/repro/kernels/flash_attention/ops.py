@@ -1,0 +1,21 @@
+"""Public wrapper: blocked causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, use_pallas=None,
+                    qb=128, kb=128):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      qb=qb, kb=kb, interpret=not _on_tpu())
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

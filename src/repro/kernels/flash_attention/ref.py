@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: causal GQA attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,Hq,hd); k,v: (B,T,Hkv,hd) -> (B,S,Hq,hd)."""
+    B, S, Hq, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        m = kpos <= qpos
+        if window > 0:
+            m = m & (kpos > qpos - window)
+        s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return o.reshape(B, S, Hq, hd)

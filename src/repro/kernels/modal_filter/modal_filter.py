@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: blockwise modal-filter materialization.
+
+Grid: (C // cb, L // lb). Each program holds a (cb, d) parameter tile and
+produces a (cb, lb) output tile. The Vandermonde basis a^(t-1) e^{i th (t-1)}
+for the block's time range is generated in VMEM/VREGs (exp/cos/sin on the
+VPU) and contracted over the mode axis.
+
+TPU adaptation notes: time is the lane (128) axis and channels the sublane
+axis, so lb is a multiple of 128 and cb a multiple of 8; powers are computed
+as exp(t * log a) rather than iterated multiplication, which keeps every
+block independent (no cross-block carries -> embarrassingly parallel grid).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(log_a_ref, theta_ref, R_re_ref, R_im_ref, h0_ref, out_ref, *,
+            lb: int):
+    li = pl.program_id(1)
+    # time indices for this block, as exponents t-1 (output index t)
+    t = (li * lb + jax.lax.iota(jnp.float32, lb)) - 1.0     # (lb,)
+    log_a = log_a_ref[...]                                  # (cb, d)
+    theta = theta_ref[...]
+    mag = jnp.exp(log_a[:, :, None] * t[None, None, :])     # (cb, d, lb)
+    ang = theta[:, :, None] * t[None, None, :]
+    basis = mag * jnp.cos(ang) * R_re_ref[...][:, :, None] \
+        - mag * jnp.sin(ang) * R_im_ref[...][:, :, None]
+    h = jnp.sum(basis, axis=1)                              # (cb, lb)
+    # t == 0 lane (only in block li == 0) is the passthrough h0
+    is_t0 = (t[None, :] == -1.0)
+    out_ref[...] = jnp.where(is_t0, h0_ref[...][:, None], h)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "cb", "lb", "interpret"))
+def modal_filter_pallas(log_a, theta, R_re, R_im, h0, *, L: int,
+                        cb: int = 8, lb: int = 512, interpret: bool = True):
+    C, d = log_a.shape
+    assert L % lb == 0 and C % cb == 0, (C, L, cb, lb)
+    grid = (C // cb, L // lb)
+    param_spec = pl.BlockSpec((cb, d), lambda ci, li: (ci, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, lb=lb),
+        grid=grid,
+        in_specs=[param_spec, param_spec, param_spec, param_spec,
+                  pl.BlockSpec((cb,), lambda ci, li: (ci,))],
+        out_specs=pl.BlockSpec((cb, lb), lambda ci, li: (ci, li)),
+        out_shape=jax.ShapeDtypeStruct((C, L), jnp.float32),
+        interpret=interpret,
+    )(log_a.astype(jnp.float32), theta.astype(jnp.float32),
+      R_re.astype(jnp.float32), R_im.astype(jnp.float32),
+      h0.astype(jnp.float32))

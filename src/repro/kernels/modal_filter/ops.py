@@ -1,0 +1,26 @@
+"""Public wrapper: modal filter materialization.
+
+On TPU this dispatches to the Pallas kernel (interpret=False); on CPU the
+kernel runs in interpret mode for correctness tests, while production CPU
+paths use the jnp reference (same math).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.modal_filter.modal_filter import modal_filter_pallas
+from repro.kernels.modal_filter.ref import modal_filter_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def modal_filter(log_a, theta, R_re, R_im, h0, L: int, *,
+                 use_pallas: bool = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return modal_filter_pallas(log_a, theta, R_re, R_im, h0, L=L,
+                                   interpret=not _on_tpu())
+    return modal_filter_ref(log_a, theta, R_re, R_im, h0, L)

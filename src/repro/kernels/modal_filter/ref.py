@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: modal filter materialization (Lemma 3.1).
+
+h[c, 0] = h0[c];  h[c, t] = sum_n a^(t-1) (R_re cos(th (t-1)) - R_im sin(th (t-1)))
+"""
+import jax.numpy as jnp
+
+
+def modal_filter_ref(log_a, theta, R_re, R_im, h0, L: int):
+    """(C, d) params -> (C, L) filters."""
+    t = jnp.arange(L - 1, dtype=jnp.float32)
+    mag = jnp.exp(log_a[..., None] * t)                    # (C, d, L-1)
+    ang = theta[..., None] * t
+    tail = jnp.einsum("cd,cdl->cl", R_re, mag * jnp.cos(ang)) \
+        - jnp.einsum("cd,cdl->cl", R_im, mag * jnp.sin(ang))
+    return jnp.concatenate([h0[:, None], tail], axis=-1)

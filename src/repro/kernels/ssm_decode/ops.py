@@ -1,0 +1,21 @@
+"""Public wrapper: fused modal-SSM decode step."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_decode.ref import ssm_decode_ref
+from repro.kernels.ssm_decode.ssm_decode import ssm_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssm_decode(x_re, x_im, u, log_a, theta, R_re, R_im, h0, *,
+               use_pallas: bool = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return ssm_decode_pallas(x_re, x_im, u, log_a, theta, R_re, R_im, h0,
+                                 interpret=not _on_tpu())
+    return ssm_decode_ref(x_re, x_im, u, log_a, theta, R_re, R_im, h0)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: fused modal-SSM decode step (Prop. 3.3, paper convention).
+
+y_t = Re[R . x_t] + h0 u_t ;  x_{t+1} = lam x_t + u_t   (B, C, d) state.
+"""
+import jax.numpy as jnp
+
+
+def ssm_decode_ref(x_re, x_im, u, log_a, theta, R_re, R_im, h0):
+    """x: (B,C,d); u: (B,C); params (C,d)/(C,). Returns (y, x_re', x_im')."""
+    y = jnp.einsum("bcd,cd->bc", x_re, R_re) - jnp.einsum("bcd,cd->bc", x_im, R_im)
+    y = y + h0[None, :] * u
+    lr = jnp.exp(log_a) * jnp.cos(theta)
+    li = jnp.exp(log_a) * jnp.sin(theta)
+    nxr = lr[None] * x_re - li[None] * x_im + u[..., None]
+    nxi = lr[None] * x_im + li[None] * x_re
+    return y, nxr, nxi

@@ -1,0 +1,294 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+
+Two artifacts per cell:
+
+  PROOF   — the full model, scanned layer stacks, lowered AND compiled for the
+            production mesh (16x16 and 2x16x16). Sharding mismatches, compile
+            OOMs, unsupported collectives surface here. memory_analysis comes
+            from this compile (scan reuses buffers, so temp sizes are
+            realistic).
+
+  COSTS   — XLA's cost_analysis counts while-loop bodies ONCE regardless of
+            trip count, so a scanned stack under-reports FLOPs/bytes/
+            collectives. We therefore compile the SAME cell at 1 and 2 layer
+            groups with every structural loop unrolled, and extrapolate:
+                total(n) = base + (n_groups - 1) * (cost_2g - cost_1g)
+            The delta isolates one full group including its collectives; the
+            base holds embed/logits/optimizer. This is exact for uniform
+            stacks (all ours are).
+"""
+# The placeholder-device count MUST be set before any jax initialization.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ASSIGNED, PAPER_ARCHS, SHAPES, cell_applicable,
+                           get_config)
+from repro.distributed.sharding import FSDP_RULES, SERVE_RULES, TRAIN_RULES
+from repro.launch import specs as S
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.roofline import (analyze, collective_bytes,
+                                   fused_memory_bytes, model_flops_for)
+from repro.models.layers import ShardCtx
+from repro.models.model import decode_step, forward, prefill
+from repro.train.train_step import make_train_step
+
+
+def _build_lowered(cfg, shape, mesh, *, moe_impl: str, remat: str,
+                   layout: str = "tp"):
+    """Lower the cell's step function for `cfg` on `mesh`."""
+    if shape.kind == "train":
+        rules = FSDP_RULES if layout == "fsdp" else TRAIN_RULES
+        pvals, paxes, pshard = S.abstract_params(cfg, mesh, rules)
+        ovals, oaxes, oshard = S.abstract_opt(pvals, paxes, mesh, rules)
+        batch, bshard = S.batch_spec(cfg, shape, mesh, rules)
+        step_fn = make_train_step(cfg, mesh, rules=rules, moe_impl=moe_impl,
+                                  remat=remat)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(pshard, oshard, bshard, None),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        with mesh:
+            return jitted.lower(pvals, ovals, batch,
+                                jax.ShapeDtypeStruct((), jnp.int32))
+    rules = SERVE_RULES
+    ctx = ShardCtx(mesh=mesh, rules=rules)
+    pvals, paxes, pshard = S.abstract_params(cfg, mesh, rules)
+    # VLM patch embeddings occupy kv-cache positions ahead of the text tokens
+    extra = cfg.frontend_len if (cfg.frontend != "none" and not cfg.enc_dec) else 0
+    if shape.kind == "prefill":
+        ps = S.prompt_spec(cfg, shape, mesh, rules)
+        cache_len = shape.seq_len + extra
+        cvals, caxes, cshard = S.abstract_cache(cfg, shape.global_batch,
+                                                cache_len, mesh, rules)
+
+        def prefill_fn(params, tokens, frontend=None):
+            return prefill(params, tokens, cfg, max_len=cache_len, ctx=ctx,
+                           frontend=frontend, moe_impl=moe_impl)
+
+        args = [pvals, ps["tokens"][0]]
+        in_sh = [pshard, ps["tokens"][1]]
+        if "frontend" in ps:
+            args.append(ps["frontend"][0])
+            in_sh.append(ps["frontend"][1])
+        jitted = jax.jit(prefill_fn, in_shardings=tuple(in_sh),
+                         out_shardings=(cshard, None))
+        with mesh:
+            return jitted.lower(*args)
+    # decode
+    cvals, caxes, cshard = S.abstract_cache(cfg, shape.global_batch,
+                                            shape.seq_len + extra, mesh, rules)
+    tok, tsh = S.decode_token_spec(shape, mesh, rules)
+
+    def decode_fn(params, cache, tokens):
+        return decode_step(params, cache, tokens, cfg, ctx=ctx)
+
+    jitted = jax.jit(decode_fn, in_shardings=(pshard, cshard, tsh),
+                     out_shardings=(cshard, None), donate_argnums=(1,))
+    with mesh:
+        return jitted.lower(pvals, cvals, tok)
+
+
+def _cost_triple(compiled) -> Tuple[float, float, float, Dict[str, float]]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb, breakdown = collective_bytes(compiled.as_text())
+    return flops, byts, cb, breakdown
+
+
+def _reduced_cfg(cfg, n_periods: int):
+    period = len(cfg.pattern)
+    kw = {"n_layers": n_periods * period}
+    if cfg.enc_dec:
+        kw["n_enc_layers"] = n_periods
+    return cfg.replace(**kw)
+
+
+def prove_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               moe_impl: str, remat: str, verbose: bool = True,
+               layout: str = "tp") -> Dict:
+    """Full model, rolled scans: lower + compile + memory_analysis."""
+    from repro import flags
+    flags.set_dryrun_unroll(False)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    lowered = _build_lowered(cfg, shape, mesh, moe_impl=moe_impl,
+                             remat=remat, layout=layout)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {"argument_size": int(getattr(ma, "argument_size_in_bytes", 0)),
+               "output_size": int(getattr(ma, "output_size_in_bytes", 0)),
+               "temp_size": int(getattr(ma, "temp_size_in_bytes", 0))}
+    except Exception:
+        pass
+    res = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": "proof", "status": "ok",
+           "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+           "memory": mem}
+    if verbose:
+        print(f"[proof {arch} x {shape_name} x {mesh_name}] OK "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"mem(args/temp)={mem.get('argument_size', 0)/1e9:.2f}/"
+              f"{mem.get('temp_size', 0)/1e9:.2f} GB", flush=True)
+    return res
+
+
+def measure_cell(arch: str, shape_name: str, *, moe_impl: str, remat: str,
+                 verbose: bool = True, layout: str = "tp") -> Dict:
+    """Extrapolated roofline costs on the single-pod mesh (see module doc)."""
+    from repro import flags
+    flags.set_dryrun_unroll(True)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    mesh = make_production_mesh(multi_pod=False)
+    n_chips = mesh.devices.size
+    period = len(cfg.pattern)
+    n_groups_f = cfg.n_layers / period           # fractional OK (remainders)
+
+    t0 = time.time()
+    cost = {}
+    for tag, np_ in (("1g", 1), ("2g", 2)):
+        c = _reduced_cfg(cfg, np_)
+        lowered = _build_lowered(c, shape, mesh, moe_impl=moe_impl,
+                                 remat=remat, layout=layout)
+        compiled = lowered.compile()
+        cost[tag] = _cost_triple(compiled)
+    t_measure = time.time() - t0
+
+    f1, b1, c1, bd1 = cost["1g"]
+    f2, b2, c2, bd2 = cost["2g"]
+    scale = n_groups_f - 1.0
+    flops = f1 + scale * max(f2 - f1, 0.0)
+    byts = b1 + scale * max(b2 - b1, 0.0)
+    coll = c1 + scale * max(c2 - c1, 0.0)
+    breakdown = {k: bd1.get(k, 0.0) + scale * max(bd2.get(k, 0.0) - bd1.get(k, 0.0), 0.0)
+                 for k in set(bd1) | set(bd2)}
+
+    mf = model_flops_for(cfg, shape) / n_chips
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = byts / HW["hbm_bw"]
+    t_mem_fused = fused_memory_bytes(cfg, shape, n_chips) / HW["hbm_bw"]
+    t_coll = coll / HW["ici_bw"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_model = mf / HW["peak_flops_bf16"]
+    # "fused" fraction: what a TPU with kernel-level fusion would see —
+    # memory term from the analytic traffic model instead of XLA:CPU's
+    # unfused operand count.
+    t_worst_fused = max(t_compute, t_mem_fused, t_coll, 1e-30)
+    res = {
+        "arch": arch, "shape": shape_name, "mesh": "16x16", "kind": "costs",
+        "status": "ok", "measure_s": round(t_measure, 1),
+        "hlo_flops": flops, "hlo_bytes": byts, "coll_bytes": coll,
+        "coll_breakdown": breakdown, "model_flops": mf,
+        "t_compute_ms": t_compute * 1e3, "t_memory_ms": t_memory * 1e3,
+        "t_memory_fused_ms": t_mem_fused * 1e3,
+        "t_collective_ms": t_coll * 1e3, "bottleneck": bottleneck,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": t_model / max(max(terms.values()), 1e-30),
+        "roofline_fraction_fused": t_model / t_worst_fused,
+        "moe_impl": moe_impl, "remat": remat, "layout": layout,
+    }
+    if verbose:
+        print(f"[costs {arch} x {shape_name}] Tc={res['t_compute_ms']:.2f}ms "
+              f"Tm={res['t_memory_ms']:.2f}ms (fused {res['t_memory_fused_ms']:.2f}) "
+              f"Tcoll={res['t_collective_ms']:.2f}ms "
+              f"-> {bottleneck} useful={res['useful_ratio']:.2f} "
+              f"roofline={res['roofline_fraction']:.1%} "
+              f"(fused {res['roofline_fraction_fused']:.1%}) ({t_measure:.0f}s)",
+              flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--mode", choices=["proof", "costs", "full"], default="full")
+    ap.add_argument("--moe-impl", choices=["dense", "dropless", "ep"], default="dropless")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    archs = ASSIGNED + ["multihyena-1.3b"] if args.all else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+
+    results = []
+    failures = 0
+
+    def run(fn, *a, **kw):
+        nonlocal failures
+        try:
+            results.append(fn(*a, **kw))
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            results.append({"arch": a[0], "shape": a[1], "status": "FAIL",
+                            "where": fn.__name__, **kw_meta(kw),
+                            "error": str(e)[:500]})
+        if args.out:
+            _write(results, args)
+
+    def kw_meta(kw):
+        return {"mesh": "2x16x16" if kw.get("multi_pod") else "16x16"}
+
+    for arch in archs:
+        for shape in shapes:
+            if args.mode in ("costs", "full"):
+                run(measure_cell, arch, shape, moe_impl=args.moe_impl,
+                    remat=args.remat)
+            if args.mode in ("proof", "full"):
+                if args.mesh in ("pod", "both"):
+                    run(prove_cell, arch, shape, multi_pod=False,
+                        moe_impl=args.moe_impl, remat=args.remat)
+                if args.mesh in ("multipod", "both"):
+                    run(prove_cell, arch, shape, multi_pod=True,
+                        moe_impl=args.moe_impl, remat=args.remat)
+    print(f"entries: {len(results)}  failures: {failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+def _write(results, args):
+    os.makedirs(args.out, exist_ok=True)
+    tag = "all" if args.all else f"{args.arch}_{args.shape or 'allshapes'}"
+    path = os.path.join(args.out, f"dryrun_{tag}_{args.mode}.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import to
+materialize the placeholder devices.
+
+Topology (TPU v5e-256 pods):
+  single pod : (data=16, model=16)            = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over actually-present devices (tests / smoke runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+HW = {
+    # TPU v5e per-chip constants used for the roofline terms
+    "peak_flops_bf16": 197e12,      # FLOP/s
+    "hbm_bw": 819e9,                # B/s
+    "ici_bw": 50e9,                 # B/s per link
+    "hbm_bytes": 16e9,
+}

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report experiments/dryrun/dryrun_all_full.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_costs(rows):
+    out = ["| arch | shape | Tc (ms) | Tm (ms) | Tcoll (ms) | bottleneck | "
+           "useful | roofline |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("kind") != "costs" or r.get("status") != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']:.2f} "
+            f"| {r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} "
+            f"| {r['bottleneck']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.1%} |")
+    return "\n".join(out)
+
+
+def fmt_proofs(rows):
+    out = ["| arch | shape | mesh | compile (s) | args/dev (GB) | temp/dev (GB) |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("kind") != "proof" or r.get("status") != "ok":
+            continue
+        m = r.get("memory", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} "
+            f"| {m.get('argument_size', 0)/1e9:.2f} "
+            f"| {m.get('temp_size', 0)/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def fmt_skips(rows):
+    out = ["| arch | shape | reason |", "|---|---|---|"]
+    seen = set()
+    for r in rows:
+        if r.get("status") == "skipped":
+            key = (r["arch"], r["shape"])
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(f"| {r['arch']} | {r['shape']} | {r['reason']} |")
+    return "\n".join(out)
+
+
+def summarize(rows):
+    n_ok = sum(1 for r in rows if r.get("status") == "ok")
+    n_skip = sum(1 for r in rows if r.get("status") == "skipped")
+    n_fail = sum(1 for r in rows if r.get("status") == "FAIL")
+    return f"entries: ok={n_ok} skipped={n_skip} failed={n_fail}"
+
+
+def main():
+    rows = []
+    for path in sys.argv[1:]:
+        rows.extend(json.load(open(path)))
+    print("## Summary\n", summarize(rows))
+    print("\n## Roofline costs (16x16, per chip)\n")
+    print(fmt_costs(rows))
+    print("\n## Compile proofs\n")
+    print(fmt_proofs(rows))
+    print("\n## Skipped cells\n")
+    print(fmt_skips(rows))
+
+
+if __name__ == "__main__":
+    main()

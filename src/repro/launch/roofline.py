@@ -1,0 +1,193 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). collective_bytes is
+parsed from the post-SPMD HLO text: we sum the result bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+weighting all-reduce x2 (ring reduce+broadcast). cost_analysis numbers are
+PER-PARTICIPANT after SPMD partitioning (the module is the per-device
+program), so the terms are per-chip step latencies already — no extra /chips
+division is applied to the parsed per-device quantities; the formulas above
+are implemented with chips=1 against the per-device module.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+# bytes moved on the wire per byte of result, simple ring model
+_COLL_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    """Total wire bytes per device and a per-op-kind breakdown."""
+    per_kind: Dict[str, float] = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        # skip the -done halves of async pairs (counted at -start)
+        span = hlo_text[max(0, m.start() - 120):m.end()]
+        if f"{kind}-done" in span:
+            continue
+        b = _shape_bytes(dtype, dims) * _COLL_WEIGHT[kind]
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+    return sum(per_kind.values()), per_kind
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, float]
+    model_flops: float
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / HW["peak_flops_bf16"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / HW["ici_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs per device (remat/redundancy waste)."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline the step achieves if every term
+        overlapped perfectly: t_model_compute / max(all terms)."""
+        t_model = self.model_flops / HW["peak_flops_bf16"]
+        t = max(self.t_compute, self.t_memory, self.t_collective, 1e-30)
+        return t_model / t
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} "
+                f"| {self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} "
+                f"| {self.t_collective*1e3:.2f} | {self.bottleneck} "
+                f"| {self.useful_ratio:.2f} | {self.roofline_fraction:.2%} |")
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
+            model_flops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):            # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    cb, breakdown = collective_bytes(text)
+    try:
+        ma = compiled.memory_analysis()
+        per_dev = float(getattr(ma, "argument_size_in_bytes", 0) +
+                        getattr(ma, "output_size_in_bytes", 0) +
+                        getattr(ma, "temp_size_in_bytes", 0))
+    except Exception:
+        per_dev = None
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, hlo_flops=flops,
+                    hlo_bytes=byts, coll_bytes=cb, coll_breakdown=breakdown,
+                    model_flops=model_flops, bytes_per_device=per_dev)
+
+
+def fused_memory_bytes(cfg, shape, n_chips: int = 256) -> float:
+    """Analytic per-chip HBM traffic for a step, assuming TPU-level fusion.
+
+    XLA:CPU's "bytes accessed" counts every op's operands with no fusion, so
+    the raw memory term is a loose upper bound (flash-attention block buffers
+    and elementwise chains live in VMEM on TPU). This model counts only
+    irreducible traffic:
+
+      train:   params: read bf16 (fwd+bwd+remat=3x) + grad write/read fp32 +
+               AdamW m,v read+write fp32 + fp32 master read/write
+               activations: saved layer inputs (B,S,D) bf16 x layers, written
+               once + read once; logits fp32 read/write twice.
+      prefill: params read once + kv cache write + activations stream ~2x.
+      decode:  active params read + cache/state read+write + small vectors.
+    """
+    P = cfg.n_params()
+    Pa = cfg.n_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    D, L = cfg.d_model, cfg.n_layers
+    if shape.kind == "train":
+        # full bf16 params stream through each chip (post all-gather) for
+        # fwd + remat + bwd; optimizer state + grads + master touch only the
+        # local 1/n shard
+        param_traffic = Pa * 2 * 3 + P * (4 + 4 + 2 * 4 + 2 * 4) / n_chips
+        act = B * S * D * 2 * L * 2 * 2 / n_chips   # saved inputs w+r, fwd+bwd
+        logits = B * S * cfg.vocab * 4 * 2 / n_chips
+        return param_traffic + act + logits
+    if shape.kind == "prefill":
+        kv = 2 * B * S * cfg.n_kv_heads * cfg.hd * 2 * L / n_chips
+        act = B * S * D * 2 * L * 2 / n_chips
+        return Pa * 2 / min(n_chips, 16) + kv + act   # TP-16 param shards
+    # decode: one token
+    kv_read = (2 * B * S * cfg.n_kv_heads * cfg.hd * 2 * L / n_chips
+               if not cfg.attention_free else 0)
+    state = B * D * 64 * L * 4 * 2 / n_chips    # generous recurrent-state bound
+    return Pa * 2 / min(n_chips, 16) + kv_read + state
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D for training, 2 N_active per generated token for
+    decode, 2 N_active * tokens for prefill — per device."""
+    n_active = cfg.n_active_params()
+    toks = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        return 2.0 * n_active * toks
+    return 2.0 * n_active * shape.global_batch      # decode: one token/stream

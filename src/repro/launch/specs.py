@@ -1,0 +1,104 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every dry-run cell.
+
+No device allocation happens here: params/optimizer/caches are produced with
+jax.eval_shape over the real init functions, so the dry-run lowers exactly
+the structures the real launcher would build.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (Param, SERVE_RULES, TRAIN_RULES,
+                                        ShardingRules, resolve_spec, unzip)
+from repro.models.model import init_cache, init_params
+from repro.optim.adamw import adamw_init
+
+
+def _shardings_for(axes_tree, shapes_tree, rules: ShardingRules, mesh: Mesh):
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    vals_flat, treedef = jax.tree.flatten(shapes_tree)
+    # axes leaves are tuples of strings; flatten against the value structure
+    axes_flat = treedef.flatten_up_to(axes_tree)
+    out = [NamedSharding(mesh, resolve_spec(tuple(v.shape), tuple(a),
+                                            rules, mesh_shape))
+           for v, a in zip(vals_flat, axes_flat)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules):
+    """(ShapeDtypeStruct tree, NamedSharding tree) for model params.
+
+    The Param wrapper carries static string axes, so we capture the axes tree
+    as a tracing side effect and eval_shape only the value tree."""
+    box = {}
+
+    def build():
+        values, axes = unzip(init_params(jax.random.PRNGKey(0), cfg))
+        box["axes"] = axes
+        return values
+
+    values = jax.eval_shape(build)
+    axes = box["axes"]
+    shardings = _shardings_for(axes, values, rules, mesh)
+    return values, axes, shardings
+
+
+def abstract_opt(values, axes, mesh: Mesh, rules: ShardingRules):
+    opt = jax.eval_shape(adamw_init, values)
+    opt_axes = type(opt)(count=(), mu=axes, nu=axes)
+    shardings = _shardings_for(opt_axes, opt, rules, mesh)
+    return opt, opt_axes, shardings
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh,
+                   rules: ShardingRules):
+    box = {}
+
+    def build():
+        values, axes = unzip(init_cache(cfg, batch, max_len))
+        box["axes"] = axes
+        return values
+
+    values = jax.eval_shape(build)
+    axes = box["axes"]
+    shardings = _shardings_for(axes, values, rules, mesh)
+    return values, axes, shardings
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               rules: ShardingRules) -> Tuple[Dict, Dict]:
+    """Abstract train batch {tokens, [frontend]} + shardings."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    axes = {"tokens": ("batch", None)}
+    if cfg.frontend != "none":
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        axes["frontend"] = ("batch", None, "act_embed")
+    shardings = _shardings_for(axes, batch, rules, mesh)
+    return batch, shardings
+
+
+def decode_token_spec(shape: ShapeConfig, mesh: Mesh, rules: ShardingRules):
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    sh = _shardings_for(("batch", None), tok, rules, mesh)
+    return tok, sh
+
+
+def prompt_spec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                rules: ShardingRules):
+    B, S = shape.global_batch, shape.seq_len
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    sh = _shardings_for(("batch", None), toks, rules, mesh)
+    out = {"tokens": (toks, sh)}
+    if cfg.frontend != "none":
+        fe = jax.ShapeDtypeStruct((B, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        out["frontend"] = (fe, _shardings_for(("batch", None, "act_embed"), fe,
+                                              rules, mesh))
+    return out

@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    init_params, forward, train_loss, decode_step, init_cache, prefill,
+)

@@ -1,0 +1,344 @@
+"""Multi-head Hyena (paper Sec. 4) and its three inference modes.
+
+Training/prefill mode evaluates the long convolution with an FFT; decode mode
+either (a) uses the LaughingHyena-distilled modal SSM (O(d) per token), or
+(b) falls back to the cached-convolution baseline (Lemma 2.1, O(t) per token)
+for pre-distillation models.
+
+Filter parametrization follows Hyena: an implicit MLP with sine activations
+over positional features, modulated by a learned exponential-decay window.
+MultiHyena ties filters across channels into M heads: head m's single filter
+h^m is applied to all D/M channels of that head.
+
+Deployment form. The paper's Sec.-4 operator is written with a per-head outer
+product z^m = k^m (x) v^m in R^{L x N x N}. Materializing that tensor costs
+L*N*D activations; the paper's own memory measurements (Fig. 5.4: constant,
+small) imply the deployed operator is the elementwise Hyena gating with tied
+filters (the N=1-per-subhead specialization). We therefore use the elementwise
+form y = q . (h * (k . v)) with M tied filters as the production operator, and
+provide `outer_product_op` (the literal Sec.-4 form) for the associative-recall
+validation of Theorem 4.1 at small widths. See DESIGN.md #hardware-adaptation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import Param
+from repro.models.layers import (
+    NOCTX, ShardCtx, apply_short_conv, dense_init, init_short_conv,
+    short_conv_step,
+)
+
+
+# ---------------------------------------------------------------------------
+# Implicit filter (sine-activated MLP over positional features)
+# ---------------------------------------------------------------------------
+def positional_features(L: int, emb: int) -> jnp.ndarray:
+    """(L, emb) features: normalized time + exponentially spaced sinusoids."""
+    t = jnp.linspace(0.0, 1.0, L)[:, None]
+    nb = (emb - 1) // 2
+    f = jnp.asarray(np.linspace(1e-4, nb - 1, nb))[None, :]
+    z = jnp.exp(-1j * f * t * 2 * math.pi)
+    return jnp.concatenate([t, z.real, z.imag], axis=-1).astype(jnp.float32)
+
+
+def init_filter_mlp(key, hcfg, M: int):
+    """Implicit filter MLP producing M tied filters."""
+    order, emb = hcfg.filter_order, hcfg.filter_emb
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "w1": dense_init(k1, (emb, order), (None, "filters"), in_dim=emb),
+        "w2": dense_init(k2, (order, order), ("filters", "filters"), in_dim=order),
+        "w3": dense_init(k3, (order, M), ("filters", None), in_dim=order),
+        "decay": Param(jnp.linspace(0.5, 3.5, M), (None,)),   # window rates
+        "bias": Param(jax.random.normal(k4, (M,)) * 0.1, (None,)),  # h0 term
+    }
+
+
+def init_filter_ssm(key, hcfg, M: int):
+    """H3-style filter: a trainable diagonal SSM in modal form (App. E.3.1's
+    family). The filter IS an order-ssm_state recurrence already, so
+    distillation to a lower order is exact model-order reduction."""
+    d = hcfg.ssm_state
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "log_a": Param(jnp.log(jax.random.uniform(k1, (M, d), minval=0.6,
+                                                  maxval=0.999)),
+                       (None, "state")),
+        "theta": Param(jax.random.uniform(k2, (M, d), maxval=math.pi),
+                       (None, "state")),
+        "R_re": Param(jax.random.normal(k3, (M, d)) / d, (None, "state")),
+        "R_im": Param(jnp.zeros((M, d)), (None, "state")),
+        "bias": Param(jnp.zeros((M,)), (None,)),
+    }
+
+
+def materialize_filters(params, L: int, hcfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (h, h0): h (M, L) long filters, h0 (M,) passthrough."""
+    if hcfg.filter_param == "ssm":
+        # h[t] = Re sum_n R_n lam_n^(t-1), t >= 1; h[0] = 0 (bias is the
+        # passthrough) — Lemma 3.1 evaluation, same math as eval_filter.
+        t = jnp.arange(L - 1, dtype=jnp.float32)
+        mag = jnp.exp(params["log_a"][..., None] * t)
+        ang = params["theta"][..., None] * t
+        tail = jnp.einsum("md,mdl->ml", params["R_re"], mag * jnp.cos(ang)) \
+            - jnp.einsum("md,mdl->ml", params["R_im"], mag * jnp.sin(ang))
+        h = jnp.concatenate([jnp.zeros_like(tail[:, :1]), tail], axis=-1)
+        return h, params["bias"]
+    z = positional_features(L, hcfg.filter_emb)
+    w0 = hcfg.sine_freq
+    h = jnp.sin(w0 * (z @ params["w1"]))
+    h = jnp.sin(w0 * (h @ params["w2"]))
+    h = h @ params["w3"]                                   # (L, M)
+    if hcfg.modulate:
+        t = jnp.linspace(0.0, 1.0, L)[:, None]
+        window = jnp.exp(-jnp.abs(params["decay"])[None, :] * t * 8.0)
+        h = h * window
+    # normalize per filter (stabilizes training; standard in Hyena impls)
+    h = h / (jnp.sum(jnp.abs(h), axis=0, keepdims=True) + 1e-8)
+    return h.T, params["bias"]                             # (M, L), (M,)
+
+
+# ---------------------------------------------------------------------------
+# FFT long convolution
+# ---------------------------------------------------------------------------
+def fft_conv(u: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Causal conv of u (B, L, D) with per-channel filters h (D, L) or (M, L)
+    broadcast over channel groups. Returns (B, L, D) in u.dtype."""
+    B, L, D = u.shape
+    n = 2 * L
+    uf = jnp.fft.rfft(u.astype(jnp.float32), n=n, axis=1)       # (B, F, D)
+    hf = jnp.fft.rfft(h.astype(jnp.float32), n=n, axis=-1)      # (D|M, F)
+    if hf.shape[0] != D:                                         # tied heads
+        M = hf.shape[0]
+        hf = jnp.repeat(hf, D // M, axis=0)
+    y = jnp.fft.irfft(uf * hf.T[None], n=n, axis=1)[:, :L, :]
+    return y.astype(u.dtype)
+
+
+def fft_conv_sharded(u: jnp.ndarray, h: jnp.ndarray, ctx) -> jnp.ndarray:
+    """fft_conv under shard_map: GSPMD cannot partition FFT ops and falls back
+    to all-gathering the full global-batch FFT buffers (measured: ~120 GB per
+    device per layer at 1.3B/train_4k). The FFT runs along the *sequence*
+    axis, which is unsharded — so mapping over (batch, channel) shards makes
+    the op embarrassingly parallel with ZERO collectives."""
+    from repro.distributed.sharding import resolve_spec, shard_map_compat
+    mesh = ctx.mesh
+    if mesh is None:
+        return fft_conv(u, h)
+    B, L, D = u.shape
+    if h.shape[0] != D:
+        h = jnp.repeat(h, D // h.shape[0], axis=0)               # (D, L)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec_u = resolve_spec((B, L, D), ("batch", None, "qkv"), ctx.rules,
+                          mesh_shape)
+    spec_h = resolve_spec((D, L), ("qkv", None), ctx.rules, mesh_shape)
+    u = jax.lax.with_sharding_constraint(
+        u, jax.sharding.NamedSharding(mesh, spec_u))
+
+    def local(u_blk, h_blk):
+        return fft_conv(u_blk, h_blk)
+
+    # unchecked replication: h is replicated along 'data', so its cotangent
+    # needs the conservative psum the unchecked transpose inserts.
+    return shard_map_compat(local, mesh, (spec_u, spec_h), spec_u)(u, h)
+
+
+# ---------------------------------------------------------------------------
+# MultiHyena block
+# ---------------------------------------------------------------------------
+def init_hyena_block(key, cfg):
+    d = cfg.d_model
+    h = cfg.hyena
+    kq, kk, kv, ko, kc, kf = jax.random.split(key, 6)
+    filter_init = (init_filter_ssm if h.filter_param == "ssm"
+                   else init_filter_mlp)
+    return {
+        "wqkv": dense_init(kq, (d, 3, d), ("embed", None, "qkv"), in_dim=d),
+        "wo": dense_init(ko, (d, d), ("qkv", "embed"), in_dim=d),
+        "short_conv": init_short_conv(kc, 3 * d, h.short_conv),
+        "filter": filter_init(kf, h, h.n_filter_heads),
+        # Distilled modal SSM (populated by repro.core.distill; initialized
+        # to a stable random system so decode lowers before distillation).
+        # Paper order d == real state dim == 2 x (free complex modes): the
+        # modal form takes Re[.], so d/2 conjugate-pair representatives are
+        # stored (App. B.1) and the state is d/2 complex = d reals.
+        "distilled": init_modal_params(kv, h.n_filter_heads, h.distill_order // 2),
+    }
+
+
+def init_modal_params(key, M: int, d: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "log_a": Param(jnp.log(jax.random.uniform(k1, (M, d), minval=0.7, maxval=0.99)), (None, "state")),
+        "theta": Param(jax.random.uniform(k2, (M, d), maxval=math.pi), (None, "state")),
+        "R_re": Param(jax.random.normal(k3, (M, d)) / d, (None, "state")),
+        "R_im": Param(jnp.zeros((M, d)), (None, "state")),
+        "h0": Param(jnp.zeros((M,)), (None,)),
+    }
+
+
+def modal_poles_residues(dp) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    lam = jnp.exp(dp["log_a"]) * jnp.exp(1j * dp["theta"])
+    R = dp["R_re"] + 1j * dp["R_im"]
+    return lam, R
+
+
+def hyena_block(params, x, cfg, *, ctx: ShardCtx = NOCTX,
+                filters: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                return_cache: bool = False):
+    """Full-sequence MultiHyena (train / prefill). x: (B, S, D)."""
+    B, S, D = x.shape
+    qkv = jnp.einsum("bsd,dge->bsge", x, params["wqkv"].astype(x.dtype))
+    qkv = qkv.reshape(B, S, 3 * D)
+    pre_conv = qkv
+    qkv = apply_short_conv(params["short_conv"], qkv)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = ctx.cs(q, ("batch", None, "qkv"))
+    if filters is None:
+        filters = materialize_filters(params["filter"], S, cfg.hyena)
+    h, h0 = filters                                       # (M, S), (M,)
+    kv = ctx.cs(k * v, ("batch", None, "qkv"))
+    y = fft_conv_sharded(kv, h, ctx) + \
+        kv * jnp.repeat(h0, D // h.shape[0]).astype(x.dtype)
+    y = ctx.cs(q * y, ("batch", None, "qkv"))
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"].astype(x.dtype))
+    if return_cache:
+        # modal SSM prefill (Sec. 3.4, O(dT) matmul variant — MXU friendly)
+        xr, xi = modal_prefill_state(params["distilled"], kv, cfg.hyena)
+        w = cfg.hyena.short_conv - 1
+        cache = {"conv": pre_conv[:, S - w:, :].astype(jnp.float32),
+                 "x_re": xr, "x_im": xi}
+        return out, cache
+    return out
+
+
+def modal_prefill_state(dp, u, hcfg):
+    """State after consuming u (B, T, D): x_T[n] = sum_t lam_n^{T-1-t} u_t.
+
+    Evaluated as a (d x T) Vandermonde-basis matmul per filter head — the
+    O(dT) strategy of Sec. 3.4, which maps onto the MXU. Returns (re, im)
+    each (B, D, d).
+    """
+    B, T, D = u.shape
+    M, d = dp["log_a"].shape
+    N = D // M
+    expo = jnp.arange(T - 1, -1, -1, dtype=jnp.float32)          # T-1-t
+    mag = jnp.exp(dp["log_a"][..., None] * expo)                 # (M, d, T)
+    ang = dp["theta"][..., None] * expo
+    br = mag * jnp.cos(ang)
+    bi = mag * jnp.sin(ang)
+    ur = u.reshape(B, T, M, N).astype(jnp.float32)
+    xr = jnp.einsum("btmi,mdt->bmid", ur, br).reshape(B, D, d)
+    xi = jnp.einsum("btmi,mdt->bmid", ur, bi).reshape(B, D, d)
+    return xr, xi
+
+
+# ---------------------------------------------------------------------------
+# Decode: distilled modal recurrence (Prop. 3.3) — O(d) per token per channel
+# ---------------------------------------------------------------------------
+def init_hyena_cache(batch: int, cfg, dtype=jnp.float32) -> Dict:
+    d = cfg.d_model
+    h = cfg.hyena
+    return {
+        "conv": jnp.zeros((batch, h.short_conv - 1, 3 * d), dtype),
+        # modal state: d/2 conjugate-pair modes stored as re/im = d reals
+        # per channel — exactly the paper's order-d memory footprint.
+        "x_re": jnp.zeros((batch, d, h.distill_order // 2), dtype),
+        "x_im": jnp.zeros((batch, d, h.distill_order // 2), dtype),
+    }
+
+
+def hyena_decode(params, cache, x, cfg, *, ctx: ShardCtx = NOCTX):
+    """One-token decode with the distilled SSM. x: (B, 1, D)."""
+    B, _, D = x.shape
+    h = cfg.hyena
+    M, N = h.n_filter_heads, D // h.n_filter_heads
+    qkv = jnp.einsum("bsd,dge->bsge", x, params["wqkv"].astype(x.dtype))
+    qkv = qkv.reshape(B, 3 * D)
+    conv_cache, qkv = short_conv_step(params["short_conv"], cache["conv"], qkv)
+    q, k, v = jnp.split(qkv, 3, axis=-1)                   # (B, D) each
+    u = (k * v).astype(jnp.float32)                        # (B, D)
+
+    dp = params["distilled"]
+    log_a = jnp.repeat(dp["log_a"], N, axis=0)               # (D, d)
+    theta = jnp.repeat(dp["theta"], N, axis=0)
+    R_re = jnp.repeat(dp["R_re"], N, axis=0)
+    R_im = jnp.repeat(dp["R_im"], N, axis=0)
+    h0 = jnp.repeat(dp["h0"], N, axis=0)
+
+    # Paper convention (Prop. 3.3): y_t = Re[R . x_t] + h0 u_t, then
+    # x_{t+1} = lam x_t + u_t, with x_t holding the state after u_{t-1}.
+    xr, xi = cache["x_re"], cache["x_im"]
+    if jax.default_backend() == "tpu":
+        # fused Pallas kernel: one HBM pass over the state (see
+        # repro/kernels/ssm_decode)
+        from repro.kernels.ssm_decode.ops import ssm_decode
+        y, nxr, nxi = ssm_decode(xr, xi, u, log_a, theta, R_re, R_im, h0)
+    else:
+        lam_re = jnp.exp(log_a) * jnp.cos(theta)
+        lam_im = jnp.exp(log_a) * jnp.sin(theta)
+        y = jnp.sum(R_re * xr - R_im * xi, axis=-1) + h0 * u  # (B, D)
+        nxr = lam_re * xr - lam_im * xi + u[..., None]
+        nxi = lam_re * xi + lam_im * xr
+    out = (q.astype(jnp.float32) * y).astype(x.dtype)
+    new_cache = {"conv": conv_cache, "x_re": nxr, "x_im": nxi}
+    return new_cache, jnp.einsum("be,ed->bd", out, params["wo"].astype(x.dtype))[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Decode baseline: cached convolution (Lemma 2.1) — O(t) per token
+# ---------------------------------------------------------------------------
+def init_hyena_conv_cache(batch: int, max_len: int, cfg, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.hyena.short_conv - 1, 3 * cfg.d_model), dtype),
+        "kv": jnp.zeros((batch, max_len, cfg.d_model), dtype),   # past k.v products
+    }
+
+
+def hyena_decode_cached_conv(params, cache, x, pos, cfg, filters,
+                             *, ctx: ShardCtx = NOCTX):
+    """Naive cached-conv decode: y_t = q_t * sum_j h_{t-j} (kv)_j."""
+    B, _, D = x.shape
+    h_full, h0 = filters                                   # (M, Lmax), (M,)
+    M = h_full.shape[0]
+    qkv = jnp.einsum("bsd,dge->bsge", x, params["wqkv"].astype(x.dtype)).reshape(B, 3 * D)
+    conv_cache, qkv = short_conv_step(params["short_conv"], cache["conv"], qkv)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    kv_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["kv"], (k * v)[:, None, :].astype(cache["kv"].dtype), pos, axis=1)
+    Lmax = kv_cache.shape[1]
+    # h_rev[j] = h[pos - j] for j <= pos else 0
+    idx = pos - jnp.arange(Lmax)
+    hr = jnp.where((idx >= 0)[None, :], jnp.take(h_full, jnp.clip(idx, 0), axis=1), 0.0)
+    hr = jnp.repeat(hr, D // M, axis=0)                    # (D, Lmax)
+    y = jnp.einsum("bld,dl->bd", kv_cache, hr.astype(kv_cache.dtype))
+    y = y + jnp.repeat(h0, D // M) * (k * v)
+    out = q * y.astype(x.dtype)
+    new_cache = {"conv": conv_cache, "kv": kv_cache}
+    return new_cache, jnp.einsum("be,ed->bd", out, params["wo"].astype(x.dtype))[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Literal Sec.-4 outer-product operator (for Theorem 4.1 validation)
+# ---------------------------------------------------------------------------
+def outer_product_op(q, k, v, h, M: int):
+    """q,k,v: (B, L, D); h: (M, L). Returns (B, L, D).
+
+    y^m_t = (h^m * (k^m (x) v^m))_t q^m_t  — O(L log L * M * N^2) via FFT.
+    Only intended for small widths (tests / associative recall).
+    """
+    B, L, D = q.shape
+    N = D // M
+    qh = q.reshape(B, L, M, N)
+    kh = k.reshape(B, L, M, N)
+    vh = v.reshape(B, L, M, N)
+    z = jnp.einsum("blmi,blmj->blmij", kh, vh).reshape(B, L, M * N * N)
+    hz = fft_conv(z, jnp.repeat(h, N * N, axis=0)).reshape(B, L, M, N, N)
+    y = jnp.einsum("blmij,blmj->blmi", hz, qh)
+    return y.reshape(B, L, D)

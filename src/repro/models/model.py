@@ -1,0 +1,481 @@
+"""Top-level model: init / forward / train_loss / prefill / decode_step.
+
+Every architecture in the pool is an instance of this assembly:
+  embed -> [scan over pattern groups of blocks] -> remainder blocks -> norm -> logits
+with optional encoder (whisper) and modality-frontend stubs (qwen2-vl audio).
+
+Layer stacking: parameters of one pattern period ("group") are initialized per
+group and stacked on a leading axis, then consumed by jax.lax.scan — keeping
+HLO size O(pattern) instead of O(n_layers), which matters when compiling
+80-layer models for 512 devices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, HYENA, LOCAL_ATTN, MAMBA2, MLP_MOE,
+                                RGLRU, ModelConfig)
+from repro.distributed.sharding import Param
+from repro.models import attention as attn_mod
+from repro.models import hyena as hyena_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (NOCTX, ShardCtx, apply_mlp, apply_norm,
+                                 embed_tokens, init_embed, init_mlp, init_norm,
+                                 unembed)
+
+is_param = lambda x: isinstance(x, Param)
+
+
+def stack_groups(groups):
+    """Stack a list of Param trees along a new leading (layer) axis."""
+    def stack(*ps):
+        return Param(jnp.stack([p.value for p in ps]), (None,) + tuple(ps[0].axes))
+    return jax.tree.map(stack, *groups, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(key, kind: str, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.norm, cfg.d_model)}
+    if kind in (ATTN, LOCAL_ATTN):
+        p["mix"] = attn_mod.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                           cfg.n_kv_heads, cfg.hd)
+    elif kind == HYENA:
+        p["mix"] = hyena_mod.init_hyena_block(ks[0], cfg)
+    elif kind == MAMBA2:
+        p["mix"] = ssm_mod.init_mamba2_block(ks[0], cfg)
+    elif kind == RGLRU:
+        p["mix"] = ssm_mod.init_rglru_block(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["cross_norm"] = init_norm(cfg.norm, cfg.d_model)
+        p["cross"] = attn_mod.init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                             cfg.n_kv_heads, cfg.hd)
+    if cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model)
+        if cfg.mlp_kind == MLP_MOE:
+            p["mlp"] = moe_mod.init_moe(ks[2], cfg.d_model, cfg.d_ff, cfg.moe)
+        else:
+            p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _init_group(key, cfg: ModelConfig, cross: bool):
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {f"l{i}": _init_block(ks[i], kind, cfg, cross)
+            for i, kind in enumerate(cfg.pattern)}
+
+
+def layer_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups scanned, n_remainder unstacked layers)."""
+    period = len(cfg.pattern)
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns a Param tree (values + logical axes)."""
+    n_groups, n_rem = layer_layout(cfg)
+    keys = jax.random.split(key, n_groups + n_rem + 4)
+    cross = cfg.enc_dec
+    groups = [_init_group(keys[i], cfg, cross) for i in range(n_groups)]
+    params: Dict[str, Any] = {
+        "embed": init_embed(keys[-1], cfg.vocab, cfg.d_model, cfg.tie_embeddings,
+                            max_seq=max(cfg.max_seq, 1),
+                            learned_pos=(cfg.rope_theta <= 0.0)),
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+        "groups": stack_groups(groups),
+    }
+    if n_rem:
+        params["rem"] = [
+            _init_block(keys[n_groups + i], cfg.blocks[n_groups * len(cfg.pattern) + i],
+                        cfg, cross)
+            for i in range(n_rem)
+        ]
+    if cfg.enc_dec:
+        ekeys = jax.random.split(keys[-2], cfg.n_enc_layers)
+        enc = [_init_block(ekeys[i], ATTN, cfg, cross=False)
+               for i in range(cfg.n_enc_layers)]
+        params["encoder"] = stack_groups(enc)
+        params["enc_norm"] = init_norm(cfg.norm, cfg.d_model)
+        params["enc_pos"] = Param(
+            jax.random.normal(keys[-3], (cfg.frontend_len, cfg.d_model)) * 0.02,
+            (None, "embed"))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence)
+# ---------------------------------------------------------------------------
+def _apply_block(bp, kind: str, x, positions, cfg: ModelConfig, ctx: ShardCtx,
+                 *, enc_out=None, moe_impl: str, collect_cache: bool = False,
+                 cross_kv_cache=None):
+    """One block (mix + mlp). Returns (x, aux_loss, cache_or_None)."""
+    h = apply_norm(bp["norm1"], x, cfg.norm)
+    cache = None
+    window = cfg.window if kind == LOCAL_ATTN else 0
+    if kind in (ATTN, LOCAL_ATTN):
+        if collect_cache:
+            y, (k, v) = attn_mod.attention_block(
+                bp["mix"], h, positions, cfg, window=window, ctx=ctx, return_kv=True)
+            cache = {"k": k, "v": v}
+        else:
+            y = attn_mod.attention_block(bp["mix"], h, positions, cfg,
+                                         window=window, ctx=ctx)
+    elif kind == HYENA:
+        if collect_cache:
+            y, cache = hyena_mod.hyena_block(bp["mix"], h, cfg, ctx=ctx,
+                                             return_cache=True)
+        else:
+            y = hyena_mod.hyena_block(bp["mix"], h, cfg, ctx=ctx)
+    elif kind == MAMBA2:
+        if collect_cache:
+            y, cache = ssm_mod.mamba2_block(bp["mix"], h, cfg, ctx=ctx,
+                                            return_state=True)
+        else:
+            y = ssm_mod.mamba2_block(bp["mix"], h, cfg, ctx=ctx)
+    elif kind == RGLRU:
+        if collect_cache:
+            y, cache = ssm_mod.rglru_block(bp["mix"], h, cfg, ctx=ctx,
+                                           return_state=True)
+        else:
+            y = ssm_mod.rglru_block(bp["mix"], h, cfg, ctx=ctx)
+    else:
+        raise ValueError(kind)
+    x = ctx.cs(x + y, ("batch", None, "act_embed"))
+    if "cross" in bp:
+        h = apply_norm(bp["cross_norm"], x, cfg.norm)
+        if cross_kv_cache is not None:
+            kv = cross_kv_cache
+        else:
+            assert enc_out is not None
+            kv = attn_mod.compute_kv(bp["cross"], enc_out, None, cfg)
+        y = attn_mod.attention_block(bp["cross"], h, positions, cfg, ctx=ctx,
+                                     cross_kv=kv)
+        x = x + y
+        if collect_cache and cache is not None:
+            cache["cross_k"], cache["cross_v"] = kv
+        elif collect_cache:
+            cache = {"cross_k": kv[0], "cross_v": kv[1]}
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.d_ff > 0:
+        h = apply_norm(bp["norm2"], x, cfg.norm)
+        if cfg.mlp_kind == MLP_MOE:
+            y, aux = moe_mod.moe_block(bp["mlp"], h, cfg.moe, impl=moe_impl, ctx=ctx)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg.act, ctx=ctx)
+        x = ctx.cs(x + y, ("batch", None, "act_embed"))
+    return x, aux, cache
+
+
+def forward(params, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
+            frontend: Optional[jnp.ndarray] = None, moe_impl: str = "dropless",
+            remat: Optional[str] = "none", collect_cache: bool = False):
+    """Full-sequence forward. tokens: (B, S) int32.
+
+    Returns logits (B, S', vocab) and, with collect_cache, the per-layer
+    decode caches (for prefill). For VLM, `frontend` embeddings are prepended
+    (S' includes them). For enc-dec, `frontend` feeds the encoder.
+    """
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed_tokens(params["embed"], tokens, ctx=ctx, dtype=dtype)
+    enc_out = None
+    if cfg.enc_dec and frontend is not None:
+        enc_out = encode_stack(params, frontend.astype(dtype), cfg, ctx)
+    elif frontend is not None:                       # VLM: prepend patch embeds
+        x = jnp.concatenate([frontend.astype(dtype), x], axis=1)
+    if cfg.rope_theta <= 0.0:                        # learned absolute positions
+        x = x + params["embed"]["pos"][None, :x.shape[1], :].astype(dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                                 (x.shape[0], x.shape[1]))
+
+    n_groups, n_rem = layer_layout(cfg)
+
+    def group_body(carry, gp):
+        x, aux = carry
+        caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, a, c = _apply_block(gp[f"l{i}"], kind, x, positions, cfg, ctx,
+                                   enc_out=enc_out, moe_impl=moe_impl,
+                                   collect_cache=collect_cache)
+            aux = aux + a
+            if collect_cache:
+                caches[f"l{i}"] = c
+        return (x, aux), (caches if collect_cache else None)
+
+    body = group_body
+    if remat and remat != "none":
+        policy = {
+            "full": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.checkpoint_dots,
+            "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        }[remat]
+        body = jax.checkpoint(group_body, policy=policy)
+
+    from repro import flags
+    n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+    (x, aux), scan_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                         params["groups"],
+                                         unroll=flags.scan_unroll(n_g))
+    rem_caches = []
+    for i in range(n_rem):
+        kind = cfg.blocks[n_groups * len(cfg.pattern) + i]
+        x, a, c = _apply_block(params["rem"][i], kind, x, positions, cfg, ctx,
+                               enc_out=enc_out, moe_impl=moe_impl,
+                               collect_cache=collect_cache)
+        aux = aux + a
+        rem_caches.append(c)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings,
+                     softcap=cfg.logit_softcap, ctx=ctx)
+    if collect_cache:
+        return logits, aux, (scan_caches, rem_caches)
+    return logits, aux
+
+
+def encode_stack(params, frontend_emb, cfg: ModelConfig, ctx: ShardCtx):
+    x = frontend_emb + params["enc_pos"][None, :frontend_emb.shape[1], :].astype(
+        frontend_emb.dtype)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                                 (x.shape[0], x.shape[1]))
+
+    def body(carry, lp):
+        h = apply_norm(lp["norm1"], carry, cfg.norm)
+        y = attn_mod.attention_block(lp["mix"], h, positions, cfg, ctx=ctx,
+                                     causal=False)
+        carry = carry + y
+        h = apply_norm(lp["norm2"], carry, cfg.norm)
+        carry = carry + apply_mlp(lp["mlp"], h, cfg.act, ctx=ctx)
+        return carry, None
+
+    from repro import flags
+    n_e = jax.tree.leaves(params["encoder"])[0].shape[0]
+    x, _ = jax.lax.scan(body, x, params["encoder"], unroll=flags.scan_unroll(n_e))
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+def train_loss(params, batch, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
+               moe_impl: str = "dropless", remat: str = "none"):
+    """batch: {tokens (B,S), [frontend]}. Next-token cross-entropy."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens[:, :-1], cfg, ctx=ctx,
+                          frontend=batch.get("frontend"), moe_impl=moe_impl,
+                          remat=remat)
+    targets = tokens[:, 1:]
+    if logits.shape[1] != targets.shape[1]:          # VLM prepended frontend
+        logits = logits[:, -targets.shape[1]:, :]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                      cross: bool):
+    c: Dict[str, Any] = {}
+    if kind in (ATTN, LOCAL_ATTN):
+        eff = max_len if kind == ATTN or cfg.window <= 0 else min(max_len, cfg.window)
+        kv = attn_mod.init_kv_cache(batch, eff, cfg.n_kv_heads, cfg.hd)
+        c["k"] = Param(kv["k"], ("batch", "kv_seq", "kv_heads", None))
+        c["v"] = Param(kv["v"], ("batch", "kv_seq", "kv_heads", None))
+        if eff < max_len:                       # ring buffer for windowed layers
+            c["slot_pos"] = Param(jnp.full((eff,), -1, jnp.int32), (None,))
+    elif kind == HYENA:
+        hc = hyena_mod.init_hyena_cache(batch, cfg)
+        c["conv"] = Param(hc["conv"], ("batch", None, "qkv"))
+        c["x_re"] = Param(hc["x_re"], ("batch", "qkv", "state"))
+        c["x_im"] = Param(hc["x_im"], ("batch", "qkv", "state"))
+    elif kind == MAMBA2:
+        mc = ssm_mod.init_mamba2_cache(batch, cfg)
+        c["conv"] = Param(mc["conv"], ("batch", None, "mlp"))
+        c["ssm"] = Param(mc["ssm"], ("batch", "heads", None, "state"))
+    elif kind == RGLRU:
+        rc = ssm_mod.init_rglru_cache(batch, cfg)
+        c["conv"] = Param(rc["conv"], ("batch", None, "mlp"))
+        c["h"] = Param(rc["h"], ("batch", "mlp"))
+    if cross:
+        F = cfg.frontend_len
+        c["cross_k"] = Param(jnp.zeros((batch, F, cfg.n_kv_heads, cfg.hd),
+                                       jnp.bfloat16),
+                             ("batch", "kv_seq", "kv_heads", None))
+        c["cross_v"] = Param(jnp.zeros((batch, F, cfg.n_kv_heads, cfg.hd),
+                                       jnp.bfloat16),
+                             ("batch", "kv_seq", "kv_heads", None))
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Param-tree of decode caches (leading group axis on scanned layers)."""
+    n_groups, n_rem = layer_layout(cfg)
+    group = {f"l{i}": _init_block_cache(kind, cfg, batch, max_len, cfg.enc_dec)
+             for i, kind in enumerate(cfg.pattern)}
+    stacked = jax.tree.map(
+        lambda p: Param(jnp.broadcast_to(p.value, (n_groups,) + p.value.shape),
+                        (None,) + tuple(p.axes)),
+        group, is_leaf=is_param)
+    cache: Dict[str, Any] = {"groups": stacked,
+                             "pos": Param(jnp.zeros((), jnp.int32), ())}
+    if n_rem:
+        cache["rem"] = [
+            _init_block_cache(cfg.blocks[n_groups * len(cfg.pattern) + i], cfg,
+                              batch, max_len, cfg.enc_dec)
+            for i in range(n_rem)
+        ]
+    return cache
+
+
+def _decode_block(bp, bc, kind: str, x, pos, cfg: ModelConfig, ctx: ShardCtx):
+    h = apply_norm(bp["norm1"], x, cfg.norm)
+    window = cfg.window if kind == LOCAL_ATTN else 0
+    if kind in (ATTN, LOCAL_ATTN):
+        kv = {k: bc[k] for k in ("k", "v", "slot_pos") if k in bc}
+        kv, y = attn_mod.attention_decode(bp["mix"], kv, h, pos, cfg,
+                                          window=window, ctx=ctx)
+        bc = dict(bc, **kv)
+    elif kind == HYENA:
+        sub = {k: bc[k] for k in ("conv", "x_re", "x_im")}
+        sub, y = hyena_mod.hyena_decode(bp["mix"], sub, h, cfg, ctx=ctx)
+        bc = dict(bc, **sub)
+    elif kind == MAMBA2:
+        sub = {k: bc[k] for k in ("conv", "ssm")}
+        sub, y = ssm_mod.mamba2_decode(bp["mix"], sub, h, cfg, ctx=ctx)
+        bc = dict(bc, **sub)
+    elif kind == RGLRU:
+        sub = {k: bc[k] for k in ("conv", "h")}
+        sub, y = ssm_mod.rglru_decode(bp["mix"], sub, h, cfg, ctx=ctx)
+        bc = dict(bc, **sub)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if "cross" in bp:
+        h = apply_norm(bp["cross_norm"], x, cfg.norm)
+        y = attn_mod.attention_block(bp["cross"], h,
+                                     jnp.zeros((x.shape[0], 1), jnp.int32), cfg,
+                                     ctx=ctx, cross_kv=(bc["cross_k"], bc["cross_v"]))
+        x = x + y
+    if cfg.d_ff > 0:
+        h = apply_norm(bp["norm2"], x, cfg.norm)
+        if cfg.mlp_kind == MLP_MOE:
+            y, _ = moe_mod.moe_block(bp["mlp"], h, cfg.moe, ctx=ctx)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg.act, ctx=ctx)
+        x = x + y
+    return bc, x
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX):
+    """One decode step. tokens: (B, 1) int32. Returns (cache, logits)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], tokens, ctx=ctx, dtype=dtype)
+    if cfg.rope_theta <= 0.0:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["embed"]["pos"], pos, 1, axis=0)[None].astype(dtype)[:, 0:1]
+    n_groups, n_rem = layer_layout(cfg)
+
+    def body(x, gp_gc):
+        gp, gc = gp_gc
+        for i, kind in enumerate(cfg.pattern):
+            gc[f"l{i}"], x = _decode_block(gp[f"l{i}"], gc[f"l{i}"], kind, x,
+                                           pos, cfg, ctx)
+        return x, gc
+
+    from repro import flags
+    n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+    x, new_group_caches = jax.lax.scan(body, x, (params["groups"], cache["groups"]),
+                                       unroll=flags.scan_unroll(n_g))
+    new_cache = {"groups": new_group_caches, "pos": pos + 1}
+    if n_rem:
+        rem = []
+        for i in range(n_rem):
+            kind = cfg.blocks[n_groups * len(cfg.pattern) + i]
+            bc, x = _decode_block(params["rem"][i], cache["rem"][i], kind, x,
+                                  pos, cfg, ctx)
+            rem.append(bc)
+        new_cache["rem"] = rem
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings,
+                     softcap=cfg.logit_softcap, ctx=ctx)
+    return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence pass that fills the decode caches
+# ---------------------------------------------------------------------------
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
+            ctx: ShardCtx = NOCTX, frontend=None, moe_impl: str = "dropless"):
+    """Process prompt, return (cache, last_logits).
+
+    Attention k/v from the forward pass are padded into max_len cache buffers;
+    recurrent blocks produce O(1) states directly (Sec. 3.4 fast pre-filling).
+    """
+    B, T = tokens.shape
+    logits, _, (scan_caches, rem_caches) = forward(
+        params, tokens, cfg, ctx=ctx, frontend=frontend, moe_impl=moe_impl,
+        collect_cache=True, remat="none")
+    if frontend is not None and not cfg.enc_dec:
+        T = T + frontend.shape[1]              # VLM: patches occupy kv positions
+
+    def to_ring(leaf, seq_axis: int, eff: int):
+        """Reorder the last min(T,eff) positions into ring-slot order."""
+        Tc = leaf.shape[seq_axis]
+        if Tc <= eff:
+            pad = [(0, 0)] * leaf.ndim
+            pad[seq_axis] = (0, eff - Tc)
+            ring = jnp.pad(leaf, pad)
+            slot_pos = jnp.where(jnp.arange(eff) < Tc, jnp.arange(eff), -1)
+        else:
+            base = Tc - eff
+            j = jnp.arange(eff)
+            p = base + ((j - base) % eff)
+            ring = jnp.take(leaf, p, axis=seq_axis)
+            slot_pos = p
+        return ring, slot_pos.astype(jnp.int32)
+
+    def fix_cache(c, kind: str, seq_axis: int):
+        eff = max_len
+        if kind == LOCAL_ATTN and 0 < cfg.window < max_len:
+            eff = cfg.window
+        out = {}
+        for k, v in c.items():
+            if k in ("k", "v"):
+                if eff < max_len:
+                    ring, sp = to_ring(v.astype(jnp.bfloat16), seq_axis, eff)
+                    out[k] = ring
+                    if seq_axis == 2:    # stacked groups: (n_groups, eff)
+                        sp = jnp.broadcast_to(sp, (v.shape[0], eff))
+                    out["slot_pos"] = sp
+                else:
+                    pad = [(0, 0)] * v.ndim
+                    pad[seq_axis] = (0, max_len - v.shape[seq_axis])
+                    out[k] = jnp.pad(v.astype(jnp.bfloat16), pad)
+            elif k in ("cross_k", "cross_v"):
+                out[k] = v.astype(jnp.bfloat16)
+            elif k != "slot_pos":
+                out[k] = v
+        return out
+
+    groups = {lk: fix_cache(lv, cfg.pattern[int(lk[1:])], seq_axis=2)
+              for lk, lv in scan_caches.items()}
+    cache = {"groups": groups, "pos": jnp.asarray(T, jnp.int32)}
+    n_groups, n_rem = layer_layout(cfg)
+    if n_rem:
+        cache["rem"] = [
+            fix_cache(rc, cfg.blocks[n_groups * len(cfg.pattern) + i], seq_axis=1)
+            for i, rc in enumerate(rem_caches)
+        ]
+    return cache, logits[:, -1, :]

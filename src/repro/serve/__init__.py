@@ -1,0 +1,2 @@
+from repro.serve.engine import GenerationEngine  # noqa: F401
+from repro.serve.sampling import sample_token    # noqa: F401

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests see the real (single) CPU device — the 512-device flag is ONLY for
+# the dry-run (repro/launch/dryrun.py sets it before importing jax).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

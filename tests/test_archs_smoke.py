@@ -1,0 +1,63 @@
+"""Per-architecture smoke tests: one forward + train step on a reduced config,
+asserting output shapes and no NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.distributed.sharding import unzip
+from repro.models.model import (decode_step, forward, init_params, prefill,
+                                train_loss)
+from repro.optim.adamw import adamw_init, adamw_update
+
+ARCHS = sorted(list_archs())
+
+
+def _setup(arch, dtype="bfloat16"):
+    cfg = smoke_config(get_config(arch)).replace(dtype=dtype)
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+    fe = None
+    if cfg.frontend != "none":
+        fe = jnp.ones((2, cfg.frontend_len, cfg.d_model), jnp.bfloat16) * 0.01
+    return cfg, params, toks, fe
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nan(arch):
+    cfg, params, toks, fe = _setup(arch)
+    logits, aux = forward(params, toks, cfg, frontend=fe)
+    S = 32 + (fe.shape[1] if (fe is not None and not cfg.enc_dec) else 0)
+    assert logits.shape == (2, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_improves(arch):
+    """One gradient step reduces loss on the same batch (sanity of grads)."""
+    cfg, params, toks, fe = _setup(arch, dtype="float32")
+    batch = {"tokens": toks}
+    if fe is not None:
+        batch["frontend"] = fe
+
+    def loss_fn(p):
+        return train_loss(p, batch, cfg)[0]
+
+    l0, g = jax.value_and_grad(loss_fn)(params)
+    assert not bool(jnp.isnan(l0))
+    opt = adamw_init(params)
+    params2, _, _ = adamw_update(g, opt, params, lr=1e-2, weight_decay=0.0)
+    l1 = loss_fn(params2)
+    assert float(l1) < float(l0), (arch, float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_runs(arch):
+    cfg, params, toks, fe = _setup(arch)
+    cache, last = prefill(params, toks, cfg, max_len=64, frontend=fe)
+    cache2, lg = decode_step(params, cache, toks[:, :1], cfg)
+    assert lg.shape == (2, 1, cfg.vocab)
+    assert not bool(jnp.isnan(lg.astype(jnp.float32)).any())
+    # cache structure is stable across steps (required by the decode loop)
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)

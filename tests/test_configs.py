@@ -1,0 +1,67 @@
+"""Config registry: published sizes, smoke reductions, cell applicability."""
+import pytest
+
+from repro.configs import (ASSIGNED, SHAPES, cell_applicable, get_config,
+                           list_archs, smoke_config)
+
+# published parameter counts (billions), loose tolerance: our analytic count
+# skips small terms (biases, conv taps)
+PUBLISHED = {
+    "mistral-nemo-12b": (12.2, 0.1),
+    "llama3.2-3b": (3.2, 0.15),
+    "gemma-7b": (8.5, 0.1),       # gemma counts embeddings once (tied)
+    "starcoder2-3b": (3.0, 0.15),
+    "qwen2-vl-72b": (72.7, 0.1),
+    "dbrx-132b": (131.6, 0.05),
+    "mamba2-130m": (0.13, 0.15),
+    "granite-moe-3b-a800m": (3.3, 0.15),
+    "recurrentgemma-9b": (8.5, 0.15),
+    "whisper-medium": (0.66, 0.25),
+    "multihyena-153m": (0.21, 0.4),
+}
+
+
+def test_all_assigned_registered():
+    for a in ASSIGNED:
+        assert get_config(a).name == a
+    assert len(ASSIGNED) == 10
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED))
+def test_param_counts_match_published(arch):
+    target, tol = PUBLISHED[arch]
+    n = get_config(arch).n_params() / 1e9
+    assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_moe_active_params():
+    c = get_config("dbrx-132b")
+    assert c.n_active_params() < 0.4 * c.n_params()
+    g = get_config("granite-moe-3b-a800m")
+    assert g.n_active_params() < 0.5 * g.n_params()
+
+
+@pytest.mark.parametrize("arch", sorted(list_archs()))
+def test_smoke_reduction_preserves_family(arch):
+    cfg = get_config(arch)
+    sm = smoke_config(cfg)
+    assert sm.family == cfg.family
+    assert sm.pattern == cfg.pattern
+    assert sm.mlp_kind == cfg.mlp_kind
+    assert (sm.moe is None) == (cfg.moe is None)
+    assert sm.n_params() < 0.02 * max(cfg.n_params(), 1)
+
+
+def test_long_context_applicability():
+    # pure attention archs skip long_500k; ssm/hybrid/lcsm run it
+    assert not cell_applicable(get_config("llama3.2-3b"), SHAPES["long_500k"])[0]
+    assert not cell_applicable(get_config("dbrx-132b"), SHAPES["long_500k"])[0]
+    assert cell_applicable(get_config("mamba2-130m"), SHAPES["long_500k"])[0]
+    assert cell_applicable(get_config("recurrentgemma-9b"), SHAPES["long_500k"])[0]
+    assert cell_applicable(get_config("multihyena-153m"), SHAPES["long_500k"])[0]
+
+
+def test_cell_count():
+    """40 assigned cells = 10 archs x 4 shapes."""
+    cells = [(a, s) for a in ASSIGNED for s in SHAPES]
+    assert len(cells) == 40

@@ -1,0 +1,66 @@
+"""Recurrent decode must match the full (convolution/parallel) forward —
+Sec. 2.2's mode-switching requirement. Hyena archs are checked after
+distillation in test_system.py (pre-distillation mismatch is expected)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.distributed.sharding import unzip
+from repro.models.model import decode_step, forward, init_params, prefill
+
+NATIVE_RECURRENT = ["mamba2-130m", "recurrentgemma-9b"]
+ATTENTION = ["llama3.2-3b", "gemma-7b", "starcoder2-3b", "mistral-nemo-12b",
+             "qwen2-vl-72b", "whisper-medium", "granite-moe-3b-a800m",
+             "dbrx-132b"]
+
+
+def _run(arch, tol):
+    cfg = smoke_config(get_config(arch)).replace(dtype="float32")
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    fe = None
+    off = 0
+    if cfg.frontend != "none":
+        fe = jnp.ones((B, cfg.frontend_len, cfg.d_model), jnp.float32) * 0.01
+        if not cfg.enc_dec:
+            off = cfg.frontend_len
+    full, _ = forward(params, toks, cfg, frontend=fe)
+    P = S - 6
+    cache, last = prefill(params, toks[:, :P], cfg, max_len=64, frontend=fe)
+    errs = [float(jnp.max(jnp.abs(last - full[:, P - 1 + off])))]
+    for t in range(P, S):
+        cache, lg = decode_step(params, cache, toks[:, t:t + 1], cfg)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t + off]))))
+    assert max(errs) < tol, (arch, max(errs))
+
+
+@pytest.mark.parametrize("arch", NATIVE_RECURRENT)
+def test_native_recurrence_matches_parallel(arch):
+    _run(arch, tol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ATTENTION)
+def test_kv_cache_matches_full_attention(arch):
+    _run(arch, tol=5e-2)      # kv cache is bf16 -> ~1e-2 logit tolerance
+
+
+def test_ring_buffer_local_attention():
+    """Windowed decode past the window size must match full forward
+    (exercises the ring-buffer kv cache)."""
+    cfg = smoke_config(get_config("recurrentgemma-9b")).replace(dtype="float32")
+    # window=64 (smoke); decode beyond 64 tokens
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    key = jax.random.PRNGKey(2)
+    B, S = 1, 96
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full, _ = forward(params, toks, cfg)
+    P = 80   # > window
+    cache, last = prefill(params, toks[:, :P], cfg, max_len=S)
+    errs = [float(jnp.max(jnp.abs(last - full[:, P - 1])))]
+    for t in range(P, S):
+        cache, lg = decode_step(params, cache, toks[:, t:t + 1], cfg)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    assert max(errs) < 5e-2, errs

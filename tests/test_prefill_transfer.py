@@ -1,0 +1,93 @@
+"""Sec. 3.4 pre-filling strategies + App. A transfer-function machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (companion_from_tf, companion_step, eval_filter,
+                        init_modal, poly_from_roots, prefill_fft,
+                        prefill_recurrent, prefill_scan, prefill_vandermonde,
+                        transfer_eval_fft)
+from repro.core.transfer import get_tf_from_ss, impulse_from_tf, tf_from_modal
+
+
+@pytest.fixture(scope="module")
+def system():
+    return init_modal(jax.random.PRNGKey(0), (3,), 5, r_minmax=(0.4, 0.9))
+
+
+def test_prefill_strategies_agree(system):
+    u = jax.random.normal(jax.random.PRNGKey(1), (3, 128))
+    xr = prefill_recurrent(system, u)
+    scale = float(jnp.max(jnp.abs(xr))) + 1e-9
+    for fn in (prefill_scan, prefill_vandermonde, prefill_fft):
+        x = fn(system, u)
+        err = float(jnp.max(jnp.abs(x - xr))) / scale
+        assert err < 1e-2, (fn.__name__, err)
+
+
+def test_prefill_then_step_matches_full_conv(system):
+    """State from prefill + one modal step == direct convolution output."""
+    from repro.core.modal import modal_step
+    T = 96
+    u = jax.random.normal(jax.random.PRNGKey(2), (3, T + 1))
+    h = eval_filter(system, T + 1)
+    # y_T by direct convolution: sum_j h[T-j] u_j
+    yT = jnp.einsum("cj,cj->c", h[:, ::-1], u)
+    xT = prefill_recurrent(system, u[:, :T])
+    y, _, _ = modal_step(system, jnp.real(xT), jnp.imag(xT), u[:, T])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yT), atol=1e-3)
+
+
+def test_poly_from_roots():
+    r = jnp.asarray([1.0 + 0j, 2.0 + 0j, 3.0 + 0j])
+    c = poly_from_roots(r)
+    np.testing.assert_allclose(np.asarray(jnp.real(c)), [1, -6, 11, -6],
+                               atol=1e-5)
+
+
+def test_companion_impulse_matches_modal(system):
+    one = jax.tree.map(lambda x: x[0], system)
+    a, b = tf_from_modal(one.poles(), one.residues(), one.h0)
+    assert float(jnp.max(jnp.abs(jnp.imag(a)))) < 1e-3   # conj completion
+    A, B, C, h0 = companion_from_tf(jnp.real(a), jnp.real(b), one.h0)
+    alpha = jnp.real(a)[1:]
+    x = jnp.zeros(alpha.shape[-1])
+    out = []
+    for t in range(48):
+        x, y = companion_step(x, 1.0 if t == 0 else 0.0, alpha, jnp.real(b), h0)
+        out.append(float(y))
+    h = np.asarray(eval_filter(one, 48))
+    np.testing.assert_allclose(np.array(out), h, atol=2e-2)
+
+
+def test_transfer_eval_fft_matches_time_domain(system):
+    """Lemma A.6: FFT evaluation of H == DFT of the impulse response, up to
+    the rho^L truncation correction (App. A.4)."""
+    one = jax.tree.map(lambda x: x[0], system)
+    L = 512
+    a, b = tf_from_modal(one.poles(), one.residues(), one.h0)
+    H = transfer_eval_fft(a, b, one.h0[None], L)[0]
+    h = eval_filter(one, L)
+    Hd = jnp.fft.fft(h, axis=-1)
+    err = float(jnp.max(jnp.abs(H - Hd))) / float(jnp.max(jnp.abs(Hd)))
+    assert err < 1e-2, err
+
+
+def test_get_tf_from_ss_roundtrip():
+    """Listing 1: dense SSM -> (a, b) -> impulse matches the dense impulse."""
+    key = jax.random.PRNGKey(3)
+    d = 4
+    A = 0.5 * jax.random.normal(key, (d, d)) / np.sqrt(d)
+    B = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    C = jax.random.normal(jax.random.PRNGKey(5), (d,))
+    h0 = jnp.asarray(0.3)
+    a, beta = get_tf_from_ss(A, B, C, h0)
+    # impulse of dense system
+    imp = [float(h0)]
+    x = B
+    for _ in range(31):
+        imp.append(float(C @ x))
+        x = A @ x
+    h = impulse_from_tf(jnp.real(a), jnp.real(beta), h0[None], 32)[0]
+    np.testing.assert_allclose(np.asarray(h), np.array(imp), atol=1e-3)

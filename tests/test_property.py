@@ -1,0 +1,99 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import eval_filter, init_modal
+from repro.core.modal import ModalSSM, modal_step
+from repro.core.prefill import prefill_recurrent, prefill_vandermonde
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES, resolve_spec)
+
+MESH = {"data": 16, "model": 16}
+MESH3 = {"pod": 2, "data": 16, "model": 16}
+
+_dims = st.integers(min_value=1, max_value=4096)
+_ax = st.sampled_from([None, "batch", "embed", "mlp", "heads", "kv_heads",
+                       "vocab", "expert", "state", "kv_seq", "qseq"])
+
+
+@given(st.lists(st.tuples(_dims, _ax), min_size=1, max_size=5),
+       st.sampled_from([MESH, MESH3]))
+@settings(max_examples=200, deadline=None)
+def test_resolve_spec_always_valid(dims_axes, mesh):
+    """Sharding resolution never assigns a mesh axis twice and always
+    divides the dimension evenly — for arbitrary shapes."""
+    shape = tuple(d for d, _ in dims_axes)
+    axes = tuple(a for _, a in dims_axes)
+    for rules in (TRAIN_RULES, SERVE_RULES):
+        spec = resolve_spec(shape, axes, rules, mesh)
+        used = []
+        for dim, s in zip(shape, tuple(spec)):
+            if s is None:
+                continue
+            flat = s if isinstance(s, tuple) else (s,)
+            used.extend(flat)
+            size = int(np.prod([mesh[a] for a in flat]))
+            assert dim % size == 0
+        assert len(used) == len(set(used))
+
+
+@given(st.integers(min_value=1, max_value=6), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_stable_filter_decays(d, seed):
+    """|lam| < 1 ==> the materialized filter's tail decays (stability)."""
+    ssm = init_modal(jax.random.PRNGKey(seed), (1,), d, r_minmax=(0.2, 0.9))
+    h = np.asarray(eval_filter(ssm, 512))[0]
+    head = np.abs(h[1:64]).max() + 1e-12
+    tail = np.abs(h[-32:]).max()
+    assert tail < head * 0.9 + 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.1, 4.0), st.floats(0.1, 4.0))
+@settings(max_examples=25, deadline=None)
+def test_recurrence_is_linear_in_input(seed, a, b):
+    """y(a*u1 + b*u2) == a*y(u1) + b*y(u2) for the SSM map (superposition)."""
+    key = jax.random.PRNGKey(seed)
+    ssm = init_modal(key, (1,), 4, r_minmax=(0.3, 0.9))
+    u1 = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 32))
+    u2 = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, 32))
+    x1 = prefill_recurrent(ssm, u1)
+    x2 = prefill_recurrent(ssm, u2)
+    x12 = prefill_recurrent(ssm, a * u1 + b * u2)
+    np.testing.assert_allclose(np.asarray(a * x1 + b * x2), np.asarray(x12),
+                               atol=1e-3, rtol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8), st.integers(8, 96))
+@settings(max_examples=25, deadline=None)
+def test_prefill_equivalence_property(seed, d, T):
+    ssm = init_modal(jax.random.PRNGKey(seed), (2,), d, r_minmax=(0.2, 0.93))
+    u = jax.random.normal(jax.random.PRNGKey(seed + 9), (2, T))
+    xa = prefill_recurrent(ssm, u)
+    xb = prefill_vandermonde(ssm, u)
+    scale = float(jnp.max(jnp.abs(xa))) + 1e-6
+    assert float(jnp.max(jnp.abs(xa - xb))) / scale < 1e-3
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_time_invariance(seed):
+    """Shifting the input shifts the output: y(shift(u)) == shift(y(u))."""
+    ssm = init_modal(jax.random.PRNGKey(seed), (1,), 4, r_minmax=(0.3, 0.9))
+    T = 48
+    u = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, T))
+
+    def outputs(u):
+        xr = jnp.zeros((1, 4))
+        xi = jnp.zeros((1, 4))
+        ys = []
+        for t in range(u.shape[-1]):
+            y, xr, xi = modal_step(ssm, xr, xi, u[:, t])
+            ys.append(y)
+        return jnp.stack(ys, -1)
+
+    y = outputs(u)
+    u_shift = jnp.concatenate([jnp.zeros((1, 5)), u], axis=-1)
+    y_shift = outputs(u_shift)
+    np.testing.assert_allclose(np.asarray(y_shift[:, 5:]), np.asarray(y),
+                               atol=1e-4)

@@ -1,0 +1,87 @@
+"""End-to-end system test of the paper's pipeline:
+
+  pretrain a small MultiHyena -> Hankel analysis -> LaughingHyena distill ->
+  recurrent decode matches the convolutional forward (Sec. 5.2's logit-error
+  criterion) -> beats the random-SSM baseline by a wide margin.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core.distill import distill_model
+from repro.data.pipeline import SyntheticLM, make_batches
+from repro.distributed.sharding import unzip
+from repro.models.model import decode_step, forward, init_params, prefill
+from repro.train.train_step import init_opt, make_train_step
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = smoke_config(get_config("multihyena-153m")).replace(
+        dtype="float32", vocab=128)
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    opt = init_opt(params)
+    src = SyntheticLM(vocab=cfg.vocab, seq_len=64, global_batch=8, seed=5)
+    step = jax.jit(make_train_step(cfg, None, base_lr=2e-3, warmup=10,
+                                   total_steps=150, remat="none"))
+    losses = []
+    for i in range(150):
+        params, opt, m = step(params, opt, {"tokens": jnp.asarray(src.batch(i))},
+                              jnp.asarray(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, "pretraining must make progress"
+    return cfg, params
+
+
+def _decode_errs(cfg, params, toks, P):
+    full, _ = forward(params, toks, cfg)
+    cache, last = prefill(params, toks[:, :P], cfg, max_len=toks.shape[1])
+    errs = [float(jnp.max(jnp.abs(last - full[:, P - 1])))]
+    for t in range(P, toks.shape[1]):
+        cache, lg = decode_step(params, cache, toks[:, t:t + 1], cfg)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    scale = float(jnp.max(jnp.abs(full)))
+    return max(errs) / scale
+
+
+def test_distilled_decode_matches_forward(trained):
+    cfg, params = trained
+    toks = jax.random.randint(jax.random.PRNGKey(9), (2, 48), 0, cfg.vocab)
+    before = _decode_errs(cfg, params, toks, 40)           # random SSM slot
+    distilled, errs = distill_model(params, cfg, steps=2500, L=256)
+    for k, e in errs.items():
+        assert not bool(jnp.isnan(e).any())
+    after = _decode_errs(cfg, distilled, toks, 40)
+    # paper criterion: relative logit error small (Fig 5.1: <1e-2 at the
+    # 99.99th percentile; we bound the max over all logits at reduced
+    # training), and no worse than the undistilled random-SSM slot
+    assert after < 0.1, after
+    assert after <= before, (before, after)
+
+
+def test_hankel_spectrum_predicts_trained_compressibility(trained):
+    """After training, filters admit low-order SSMs (Sec. 4 observation):
+    the Hankel spectrum decays and predicts distillability."""
+    from repro.core.hankel import hankel_singular_values, suggest_order
+    from repro.models.hyena import materialize_filters
+    cfg, params = trained
+    fp = jax.tree.map(lambda x: x[0], params["groups"]["l0"]["mix"]["filter"])
+    h, _ = materialize_filters(fp, 256, cfg.hyena)
+    sv = hankel_singular_values(h)
+    orders = suggest_order(sv, tol=1e-2)
+    assert int(jnp.max(orders)) <= 64, orders
+
+
+def test_generation_engine_after_distillation(trained):
+    from repro.serve.engine import GenerationEngine
+    cfg, params = trained
+    distilled, _ = distill_model(params, cfg, steps=800, L=256)
+    eng = GenerationEngine(distilled, cfg, max_len=96)
+    toks, info = eng.generate(jax.random.PRNGKey(0),
+                              jnp.ones((2, 16), jnp.int32), 8,
+                              temperature=0.0)
+    assert toks.shape == (2, 8)
+    # constant-memory decode: state bytes independent of generated length
+    assert info["cache_bytes"] < 5e6
