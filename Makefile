@@ -1,0 +1,20 @@
+# Tiered test entry points (see pytest.ini: `slow` tests are deselected by
+# default, so `test-fast` is the tier-1 suite the driver runs).
+PY := PYTHONPATH=src python
+
+.PHONY: test-fast test-all test-slow bench bench-serve
+
+test-fast:
+	$(PY) -m pytest -x -q
+
+test-all:
+	$(PY) -m pytest -q -m "slow or not slow"
+
+test-slow:
+	$(PY) -m pytest -q -m slow
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-serve:
+	$(PY) -m benchmarks.run --only serve_stream

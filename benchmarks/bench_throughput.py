@@ -1,40 +1,35 @@
-"""Fig 1.1: generation throughput across batch sizes.
+"""Fig 1.1: generation throughput across batch sizes, plus the
+continuous-batching request-stream benchmark.
 
-Transformer (kv cache) vs Hyena cached-conv (Lemma 2.1) vs LaughingHyena
-(distilled recurrence). Workload: prompt 128, generate 64.
+Static-batch rows: Transformer (kv cache) vs Hyena cached-conv (Lemma 2.1)
+vs LaughingHyena (distilled recurrence), prompt 128 / generate 64 — all three
+through the same fully-jitted `generate_scanned` loop.
+
+Request-stream rows (`stream_main`, suite "serve_stream"): Poisson arrivals
+with mixed prompt lengths through the continuous-batching scheduler; reports
+tokens/s and p50/p99 end-to-end latency per deployment mode (distilled,
+cached_conv, attention kv).
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import row, timeit
 from benchmarks.models import build, hyena_cfg, transformer_cfg
-from repro.serve.engine import CachedConvHyenaEngine, GenerationEngine
+from repro.serve.engine import GenerationEngine
+from repro.serve.scheduler import (ContinuousBatchingEngine,
+                                   run_request_stream,
+                                   synthesize_request_stream)
 
 T_PROMPT, K_GEN = 128, 64
 
 
-def _throughput_engine(cfg, params, batch):
-    eng = GenerationEngine(params, cfg, max_len=T_PROMPT + K_GEN)
+def _throughput_engine(cfg, params, batch, mode="distilled"):
+    eng = GenerationEngine(params, cfg, max_len=T_PROMPT + K_GEN, mode=mode)
     prompt = jnp.ones((batch, T_PROMPT), jnp.int32)
 
     def run():
         return eng.generate_scanned(jax.random.PRNGKey(0), prompt, K_GEN)
-
-    dt = timeit(run, warmup=1, iters=3)
-    return batch * K_GEN / dt, dt
-
-
-def _throughput_cached_conv(cfg, params, batch):
-    eng = CachedConvHyenaEngine(params, cfg, max_len=T_PROMPT + K_GEN)
-    caches = eng.init_caches(batch)
-    tok = jnp.ones((batch, 1), jnp.int32)
-
-    def run():
-        c = caches
-        out = None
-        for i in range(K_GEN):
-            c, out = eng.step(c, tok, jnp.asarray(T_PROMPT + i, jnp.int32))
-        return out
 
     dt = timeit(run, warmup=1, iters=3)
     return batch * K_GEN / dt, dt
@@ -51,6 +46,42 @@ def main(out):
                 f"tok_s={tp:.0f}"))
         tp, dt = _throughput_engine(hcfg, hparams, batch)
         out(row(f"fig1.1/laughinghyena/b{batch}", dt * 1e6, f"tok_s={tp:.0f}"))
-        tp, dt = _throughput_cached_conv(hcfg, hparams, batch)
+        tp, dt = _throughput_engine(hcfg, hparams, batch, mode="cached_conv")
         out(row(f"fig1.1/hyena_cached_conv/b{batch}", dt * 1e6,
                 f"tok_s={tp:.0f}"))
+
+
+# ---------------------------------------------------------------------------
+# Request-stream serving benchmark (continuous batching)
+# ---------------------------------------------------------------------------
+N_REQ, RATE = 16, 40.0
+PROMPT_LENS = (32, 64, 128)
+GEN_TOKENS = (16, 48)
+N_SLOTS, MAX_LEN = 4, 192
+
+
+def _stream_case(cfg, params, mode):
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=N_SLOTS,
+                                   max_len=MAX_LEN, mode=mode)
+    eng.warmup(PROMPT_LENS)
+    stream = synthesize_request_stream(
+        np.random.default_rng(0), N_REQ, rate=RATE, prompt_lens=PROMPT_LENS,
+        gen_tokens=GEN_TOKENS, vocab=cfg.vocab)
+    return run_request_stream(eng, stream)
+
+
+def stream_main(out):
+    hcfg = hyena_cfg()
+    hparams = build(hcfg, distill=True)
+    tcfg = transformer_cfg()
+    tparams = build(tcfg)
+    for label, cfg, params, mode in (
+            ("distilled", hcfg, hparams, "distilled"),
+            ("cached_conv", hcfg, hparams, "cached_conv"),
+            ("attention_kv", tcfg, tparams, "distilled")):
+        m = _stream_case(cfg, params, mode)
+        out(row(f"serve_stream/{label}", m["wall_s"] * 1e6,
+                f"tok_s={m['tok_per_s']:.0f} "
+                f"p50_ms={m['p50_latency_s'] * 1e3:.1f} "
+                f"p99_ms={m['p99_latency_s'] * 1e3:.1f} "
+                f"p50_ttft_ms={m['p50_ttft_s'] * 1e3:.1f}"))

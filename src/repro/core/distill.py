@@ -31,9 +31,10 @@ def kung_poles(h: jnp.ndarray, d: int) -> jnp.ndarray:
 
     The modal form takes Re[sum R lam^t], so one pole per conjugate pair
     suffices: we extract 2d eigenvalues from the order-2d balanced factor,
-    fold them into the upper half plane (theta -> |theta|), and keep the d
-    with the largest h-inf influence |R| / |1 - |lam|| after a linear
-    residue fit.
+    keep ONE representative per conjugate pair (Im >= 0; eigenvalues of the
+    real shift matrix come in conjugate pairs, so folding |theta| would
+    duplicate each pole and crowd out the weak true modes), and rank by the
+    h-inf influence |R| / |1 - |lam|| after a linear residue fit.
     """
     S = hankel_matrix(h).astype(jnp.float32)
     m = S.shape[-1]
@@ -45,12 +46,18 @@ def kung_poles(h: jnp.ndarray, d: int) -> jnp.ndarray:
     A = jnp.linalg.pinv(O1) @ O2                           # (..., 2d, 2d)
     lam = jnp.linalg.eigvals(A)
     mag = jnp.clip(jnp.abs(lam), 1e-4, 1.2)
-    # fold conjugate pairs into the upper half plane; jitter the phases so
-    # folded duplicates don't make the residue LSQ exactly singular
+    ang = jnp.angle(lam)
+    # jitter the phases so coincident true poles don't make the LSQ singular
     jitter = jnp.linspace(0.0, 1e-4, dd)
-    lam = mag * jnp.exp(1j * (jnp.abs(jnp.angle(lam)) + jitter))
+    lam = mag * jnp.exp(1j * (ang + jitter))
+    upper = ang >= -1e-6            # one per conjugate pair; real poles kept
+    # lower-half duplicates are swapped for negligible decoy poles so the
+    # residue solve attributes each pair's energy to its single representative
+    decoy = 1e-3 * jnp.exp(1j * jnp.linspace(0.1, 3.0, dd))
+    lam = jnp.where(upper, lam, decoy)
     R = fit_residues(lam, h)
     infl = jnp.abs(R) / jnp.clip(jnp.abs(1.0 - jnp.abs(lam)), 1e-6)
+    infl = jnp.where(upper, infl, -1.0)
     idx = jnp.argsort(-infl, axis=-1)[..., :d]
     return jnp.take_along_axis(lam, idx, axis=-1)
 

@@ -1,7 +1,17 @@
-"""Serving launcher: batched auto-regressive generation.
+"""Serving launcher: batched auto-regressive generation and the
+continuous-batching request-stream mode.
+
+Fixed-batch generation (original behavior):
 
   PYTHONPATH=src python -m repro.launch.serve --arch multihyena-153m --smoke \
       --batch 8 --prompt-len 64 --gen 32 [--ckpt /tmp/run1] [--distill]
+
+Request-stream serving (Poisson arrivals, mixed prompt lengths, slot-pool
+continuous batching; reports tokens/s and p50/p99 latency):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch multihyena-153m --smoke \
+      --distill --stream --n-requests 16 --rate 20 --slots 4 \
+      --mode distilled            # or cached_conv
 
 For LCSM archs, --distill runs LaughingHyena distillation before serving
 (recurrent O(d) decode); without it the model still serves via the distilled
@@ -15,12 +25,16 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.core.distill import distill_model
 from repro.distributed.sharding import unzip
 from repro.models.model import init_params
 from repro.serve.engine import GenerationEngine
+from repro.serve.scheduler import (ContinuousBatchingEngine, SamplingParams,
+                                   run_request_stream,
+                                   synthesize_request_stream)
 from repro.train.checkpoint import Checkpointer
 
 
@@ -33,9 +47,25 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--ckpt", type=str, default=None)
     ap.add_argument("--distill", action="store_true")
-    ap.add_argument("--distill-order", type=int, default=16)
+    ap.add_argument("--distill-order", type=int, default=None,
+                    help="default: cfg.hyena.distill_order (the order the "
+                         "decode cache is sized for)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", choices=("distilled", "cached_conv"),
+                    default="distilled")
+    # request-stream serving
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous-batching request-stream mode")
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-lens", type=str, default=None,
+                    help="comma list of prompt lengths (default: "
+                         "prompt-len/2,prompt-len)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -49,23 +79,58 @@ def main():
         print(f"[serve] restored step {step}")
     if args.distill and cfg.hyena is not None:
         t0 = time.time()
-        params, errs = distill_model(params, cfg, d=args.distill_order)
-        import numpy as np
+        order = args.distill_order or cfg.hyena.distill_order
+        params, errs = distill_model(params, cfg, d=order)
         worst = max(float(jnp.max(e)) for e in errs.values())
-        print(f"[serve] distilled filters to order {args.distill_order} in "
+        print(f"[serve] distilled filters to order {order} in "
               f"{time.time()-t0:.1f}s (worst rel l2 err {worst:.3e})")
 
+    if args.stream:
+        _serve_stream(params, cfg, args)
+        return
+
     engine = GenerationEngine(params, cfg,
-                              max_len=args.prompt_len + args.gen)
+                              max_len=args.prompt_len + args.gen,
+                              mode=args.mode)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
     t0 = time.time()
     toks, info = engine.generate(key, prompt, args.gen,
-                                 temperature=args.temperature)
+                                 temperature=args.temperature,
+                                 top_k=args.top_k, top_p=args.top_p)
     jax.block_until_ready(toks)
     dt = time.time() - t0
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "
           f"({args.batch*args.gen/dt:.1f} tok/s), cache={info['cache_bytes']/1e6:.2f}MB")
     print(toks[0][:16])
+
+
+def _serve_stream(params, cfg, args):
+    if args.prompt_lens:
+        plens = tuple(int(x) for x in args.prompt_lens.split(","))
+    else:
+        plens = (max(args.prompt_len // 2, 4), args.prompt_len)
+    max_len = max(plens) + args.gen
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=args.slots,
+                                   max_len=max_len, mode=args.mode,
+                                   seed=args.seed)
+    print(f"[serve] warming up prefill lengths {plens} + decode step ...")
+    eng.warmup(plens)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              top_p=args.top_p)
+    stream = synthesize_request_stream(
+        np.random.default_rng(args.seed), args.n_requests, rate=args.rate,
+        prompt_lens=plens, gen_tokens=(max(args.gen // 2, 1), args.gen),
+        vocab=cfg.vocab, sampling=sampling)
+    m = run_request_stream(eng, stream)
+    print(f"[serve] mode={args.mode} slots={args.slots} "
+          f"{int(m['n_requests'])} requests / {int(m['n_tokens'])} tokens "
+          f"in {m['wall_s']:.2f}s")
+    print(f"[serve] tok/s={m['tok_per_s']:.1f}  "
+          f"latency p50={m['p50_latency_s']*1e3:.1f}ms "
+          f"p99={m['p99_latency_s']*1e3:.1f}ms  "
+          f"ttft p50={m['p50_ttft_s']*1e3:.1f}ms "
+          f"p99={m['p99_ttft_s']*1e3:.1f}ms")
+    print(f"[serve] scheduler stats: {eng.stats}")
 
 
 if __name__ == "__main__":

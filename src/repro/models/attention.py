@@ -252,16 +252,22 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, hd: int, dtype=jnp.bfloat
 
 def attention_decode(params, cache, x, pos, cfg, *, window=0,
                      ctx: ShardCtx = NOCTX, cross_kv=None):
-    """One-token decode. x: (B,1,D); pos: scalar int32 (current index).
+    """One-token decode. x: (B,1,D); pos: scalar int32 (current index) or a
+    per-slot (B,) vector — the continuous-batching engine runs every request
+    at its own position within one batched step.
 
     Two cache layouts:
       * linear  — cache length == max_len, written at `pos`, masked by index.
-      * ring    — cache carries "slot_pos" (absolute position per slot); used
-                  for windowed layers so a 500k-context hybrid keeps an O(window)
-                  cache. Written at pos % size, masked by slot_pos.
+      * ring    — cache carries "slot_pos" (B, eff) (absolute position per
+                  ring slot); used for windowed layers so a 500k-context
+                  hybrid keeps an O(window) cache. Written at pos % size,
+                  masked by slot_pos.
     """
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
     q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
-    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    positions = pos[:, None] if per_slot else jnp.full((B, 1), pos, jnp.int32)
     ring = cross_kv is None and "slot_pos" in cache
     if cross_kv is None:
         k_new = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
@@ -271,32 +277,47 @@ def attention_decode(params, cache, x, pos, cfg, *, window=0,
         k_new = apply_rope(k_new, positions, cfg.rope_theta,
                            cfg.m_rope_sections if cfg.m_rope else None)
         size = cache["k"].shape[1]
-        widx = pos % size if ring else pos
-        k = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k_new.astype(cache["k"].dtype), widx, axis=1)
-        v = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v_new.astype(cache["v"].dtype), widx, axis=1)
-        new_cache = {"k": k, "v": v}
-        if ring:
-            new_cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
-                cache["slot_pos"], pos[None].astype(jnp.int32), widx, axis=0)
+        if per_slot:
+            # per-slot write index: scatter one (k, v) row per batch element.
+            # Inactive slots may sit past max_len; clamp — they are masked at
+            # the scheduler level and fully overwritten on (re)admission.
+            widx = pos % size if ring else jnp.minimum(pos, size - 1)
+            b = jnp.arange(B)
+            k = cache["k"].at[b, widx].set(k_new[:, 0].astype(cache["k"].dtype))
+            v = cache["v"].at[b, widx].set(v_new[:, 0].astype(cache["v"].dtype))
+            new_cache = {"k": k, "v": v}
+            if ring:
+                new_cache["slot_pos"] = cache["slot_pos"].at[b, widx].set(pos)
+        else:
+            widx = pos % size if ring else pos
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), widx, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), widx, axis=1)
+            new_cache = {"k": k, "v": v}
+            if ring:
+                new_cache["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["slot_pos"],
+                    jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), widx,
+                    axis=1)
     else:
         k, v = cross_kv
         new_cache = {}
     T = k.shape[1]
     scores = _gqa_scores(q, k.astype(q.dtype)).astype(jnp.float32)  # (B,Hkv,G,1,T)
     if cross_kv is None:
+        pos_b = pos[:, None] if per_slot else pos          # (B,1) | scalar
         if ring:
-            sp = new_cache["slot_pos"]
-            valid = (sp >= 0) & (sp <= pos)
+            sp = new_cache["slot_pos"]                     # (B, eff)
+            valid = (sp >= 0) & (sp <= pos_b)
             if window > 0:
-                valid = valid & (sp > pos - window)
+                valid = valid & (sp > pos_b - window)
         else:
-            kpos = jnp.arange(T)
-            valid = kpos <= pos
+            kpos = jnp.arange(T)[None, :]
+            valid = jnp.broadcast_to(kpos <= pos_b, (B, T))
             if window > 0:
-                valid = valid & (kpos > pos - window)
-        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+                valid = valid & (kpos > pos_b - window)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     o = _gqa_out(probs, v.astype(q.dtype))
     y = jnp.einsum("bsnh,nhd->bsd", o, params["wo"].astype(x.dtype))

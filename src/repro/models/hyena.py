@@ -191,8 +191,14 @@ def modal_poles_residues(dp) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 def hyena_block(params, x, cfg, *, ctx: ShardCtx = NOCTX,
                 filters: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-                return_cache: bool = False):
-    """Full-sequence MultiHyena (train / prefill). x: (B, S, D)."""
+                return_cache: bool = False, cache_kind: str = "native"):
+    """Full-sequence MultiHyena (train / prefill). x: (B, S, D).
+
+    cache_kind selects what `return_cache` collects:
+      * "native" — distilled modal SSM state (O(d) recurrent decode);
+      * "conv"   — the k.v product sequence for the Lemma-2.1 cached-conv
+                   decode baseline (O(t) per token).
+    """
     B, S, D = x.shape
     qkv = jnp.einsum("bsd,dge->bsge", x, params["wqkv"].astype(x.dtype))
     qkv = qkv.reshape(B, S, 3 * D)
@@ -209,11 +215,14 @@ def hyena_block(params, x, cfg, *, ctx: ShardCtx = NOCTX,
     y = ctx.cs(q * y, ("batch", None, "qkv"))
     out = jnp.einsum("bse,ed->bsd", y, params["wo"].astype(x.dtype))
     if return_cache:
-        # modal SSM prefill (Sec. 3.4, O(dT) matmul variant — MXU friendly)
-        xr, xi = modal_prefill_state(params["distilled"], kv, cfg.hyena)
         w = cfg.hyena.short_conv - 1
-        cache = {"conv": pre_conv[:, S - w:, :].astype(jnp.float32),
-                 "x_re": xr, "x_im": xi}
+        conv = pre_conv[:, S - w:, :].astype(jnp.float32)
+        if cache_kind == "conv":
+            cache = {"conv": conv, "kv": kv.astype(jnp.float32)}
+        else:
+            # modal SSM prefill (Sec. 3.4, O(dT) matmul variant — MXU friendly)
+            xr, xi = modal_prefill_state(params["distilled"], kv, cfg.hyena)
+            cache = {"conv": conv, "x_re": xr, "x_im": xi}
         return out, cache
     return out
 
@@ -303,23 +312,44 @@ def init_hyena_conv_cache(batch: int, max_len: int, cfg, dtype=jnp.float32):
 
 def hyena_decode_cached_conv(params, cache, x, pos, cfg, filters,
                              *, ctx: ShardCtx = NOCTX):
-    """Naive cached-conv decode: y_t = q_t * sum_j h_{t-j} (kv)_j."""
+    """Naive cached-conv decode: y_t = q_t * sum_j h_{t-j} (kv)_j.
+
+    pos: scalar int32 or a per-slot (B,) vector (continuous batching: each
+    resident request decodes at its own position).
+    """
     B, _, D = x.shape
     h_full, h0 = filters                                   # (M, Lmax), (M,)
     M = h_full.shape[0]
     qkv = jnp.einsum("bsd,dge->bsge", x, params["wqkv"].astype(x.dtype)).reshape(B, 3 * D)
     conv_cache, qkv = short_conv_step(params["short_conv"], cache["conv"], qkv)
     q, k, v = jnp.split(qkv, 3, axis=-1)
-    kv_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["kv"], (k * v)[:, None, :].astype(cache["kv"].dtype), pos, axis=1)
-    Lmax = kv_cache.shape[1]
-    # h_rev[j] = h[pos - j] for j <= pos else 0
-    idx = pos - jnp.arange(Lmax)
-    hr = jnp.where((idx >= 0)[None, :], jnp.take(h_full, jnp.clip(idx, 0), axis=1), 0.0)
-    hr = jnp.repeat(hr, D // M, axis=0)                    # (D, Lmax)
-    y = jnp.einsum("bld,dl->bd", kv_cache, hr.astype(kv_cache.dtype))
-    y = y + jnp.repeat(h0, D // M) * (k * v)
-    out = q * y.astype(x.dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    Lmax = cache["kv"].shape[1]
+    if pos.ndim == 1:
+        widx = jnp.minimum(pos, Lmax - 1)                  # clamp idle slots
+        kv_cache = cache["kv"].at[jnp.arange(B), widx].set(
+            (k * v).astype(cache["kv"].dtype))
+        # h_rev[b, j] = h[pos_b - j] for j <= pos_b else 0
+        idx = pos[:, None] - jnp.arange(Lmax)[None, :]     # (B, Lmax)
+        hm = jnp.take(h_full, jnp.clip(idx, 0), axis=1)    # (M, B, Lmax)
+        hr = jnp.where((idx >= 0)[None], hm, 0.0)
+        hr = jnp.repeat(hr, D // M, axis=0)                # (D, B, Lmax)
+        y = jnp.einsum("bld,dbl->bd", kv_cache, hr.astype(kv_cache.dtype))
+    else:
+        kv_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["kv"], (k * v)[:, None, :].astype(cache["kv"].dtype), pos,
+            axis=1)
+        # h_rev[j] = h[pos - j] for j <= pos else 0
+        idx = pos - jnp.arange(Lmax)
+        hr = jnp.where((idx >= 0)[None, :],
+                       jnp.take(h_full, jnp.clip(idx, 0), axis=1), 0.0)
+        hr = jnp.repeat(hr, D // M, axis=0)                # (D, Lmax)
+        y = jnp.einsum("bld,dl->bd", kv_cache, hr.astype(kv_cache.dtype))
+    y = y.astype(jnp.float32) + jnp.repeat(h0, D // M) * \
+        (k * v).astype(jnp.float32)
+    # keep the accumulation in f32, emit in the residual-stream dtype (the
+    # short-conv cache is f32, so q/k/v promote even under bf16 configs)
+    out = (q.astype(jnp.float32) * y).astype(x.dtype)
     new_cache = {"conv": conv_cache, "kv": kv_cache}
     return new_cache, jnp.einsum("be,ed->bd", out, params["wo"].astype(x.dtype))[:, None, :]
 

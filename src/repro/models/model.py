@@ -116,7 +116,7 @@ def init_params(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 def _apply_block(bp, kind: str, x, positions, cfg: ModelConfig, ctx: ShardCtx,
                  *, enc_out=None, moe_impl: str, collect_cache: bool = False,
-                 cross_kv_cache=None):
+                 cross_kv_cache=None, cache_kind: str = "native"):
     """One block (mix + mlp). Returns (x, aux_loss, cache_or_None)."""
     h = apply_norm(bp["norm1"], x, cfg.norm)
     cache = None
@@ -132,7 +132,8 @@ def _apply_block(bp, kind: str, x, positions, cfg: ModelConfig, ctx: ShardCtx,
     elif kind == HYENA:
         if collect_cache:
             y, cache = hyena_mod.hyena_block(bp["mix"], h, cfg, ctx=ctx,
-                                             return_cache=True)
+                                             return_cache=True,
+                                             cache_kind=cache_kind)
         else:
             y = hyena_mod.hyena_block(bp["mix"], h, cfg, ctx=ctx)
     elif kind == MAMBA2:
@@ -177,12 +178,15 @@ def _apply_block(bp, kind: str, x, positions, cfg: ModelConfig, ctx: ShardCtx,
 
 def forward(params, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
             frontend: Optional[jnp.ndarray] = None, moe_impl: str = "dropless",
-            remat: Optional[str] = "none", collect_cache: bool = False):
+            remat: Optional[str] = "none", collect_cache: bool = False,
+            cache_kind: str = "native"):
     """Full-sequence forward. tokens: (B, S) int32.
 
     Returns logits (B, S', vocab) and, with collect_cache, the per-layer
     decode caches (for prefill). For VLM, `frontend` embeddings are prepended
     (S' includes them). For enc-dec, `frontend` feeds the encoder.
+    cache_kind: "native" (recurrent/kv states) or "conv" (Hyena layers cache
+    the k.v product sequence for the Lemma-2.1 cached-conv baseline).
     """
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     x = embed_tokens(params["embed"], tokens, ctx=ctx, dtype=dtype)
@@ -204,7 +208,8 @@ def forward(params, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
         for i, kind in enumerate(cfg.pattern):
             x, a, c = _apply_block(gp[f"l{i}"], kind, x, positions, cfg, ctx,
                                    enc_out=enc_out, moe_impl=moe_impl,
-                                   collect_cache=collect_cache)
+                                   collect_cache=collect_cache,
+                                   cache_kind=cache_kind)
             aux = aux + a
             if collect_cache:
                 caches[f"l{i}"] = c
@@ -229,7 +234,8 @@ def forward(params, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
         kind = cfg.blocks[n_groups * len(cfg.pattern) + i]
         x, a, c = _apply_block(params["rem"][i], kind, x, positions, cfg, ctx,
                                enc_out=enc_out, moe_impl=moe_impl,
-                               collect_cache=collect_cache)
+                               collect_cache=collect_cache,
+                               cache_kind=cache_kind)
         aux = aux + a
         rem_caches.append(c)
     x = apply_norm(params["final_norm"], x, cfg.norm)
@@ -285,7 +291,7 @@ def train_loss(params, batch, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
 # Decode
 # ---------------------------------------------------------------------------
 def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
-                      cross: bool):
+                      cross: bool, cache_kind: str = "native"):
     c: Dict[str, Any] = {}
     if kind in (ATTN, LOCAL_ATTN):
         eff = max_len if kind == ATTN or cfg.window <= 0 else min(max_len, cfg.window)
@@ -293,7 +299,12 @@ def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
         c["k"] = Param(kv["k"], ("batch", "kv_seq", "kv_heads", None))
         c["v"] = Param(kv["v"], ("batch", "kv_seq", "kv_heads", None))
         if eff < max_len:                       # ring buffer for windowed layers
-            c["slot_pos"] = Param(jnp.full((eff,), -1, jnp.int32), (None,))
+            c["slot_pos"] = Param(jnp.full((batch, eff), -1, jnp.int32),
+                                  ("batch", None))
+    elif kind == HYENA and cache_kind == "conv":
+        hc = hyena_mod.init_hyena_conv_cache(batch, max_len, cfg)
+        c["conv"] = Param(hc["conv"], ("batch", None, "qkv"))
+        c["kv"] = Param(hc["kv"], ("batch", "kv_seq", "qkv"))
     elif kind == HYENA:
         hc = hyena_mod.init_hyena_cache(batch, cfg)
         c["conv"] = Param(hc["conv"], ("batch", None, "qkv"))
@@ -318,27 +329,36 @@ def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
     return c
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
-    """Param-tree of decode caches (leading group axis on scanned layers)."""
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               cache_kind: str = "native", per_slot: bool = False):
+    """Param-tree of decode caches (leading group axis on scanned layers).
+
+    per_slot=True gives each batch row its own position counter (B,) — the
+    layout the continuous-batching engine uses, where every slot holds an
+    independent request at its own decode position.
+    """
     n_groups, n_rem = layer_layout(cfg)
-    group = {f"l{i}": _init_block_cache(kind, cfg, batch, max_len, cfg.enc_dec)
+    group = {f"l{i}": _init_block_cache(kind, cfg, batch, max_len, cfg.enc_dec,
+                                        cache_kind)
              for i, kind in enumerate(cfg.pattern)}
     stacked = jax.tree.map(
         lambda p: Param(jnp.broadcast_to(p.value, (n_groups,) + p.value.shape),
                         (None,) + tuple(p.axes)),
         group, is_leaf=is_param)
-    cache: Dict[str, Any] = {"groups": stacked,
-                             "pos": Param(jnp.zeros((), jnp.int32), ())}
+    pos = (Param(jnp.zeros((batch,), jnp.int32), ("batch",)) if per_slot
+           else Param(jnp.zeros((), jnp.int32), ()))
+    cache: Dict[str, Any] = {"groups": stacked, "pos": pos}
     if n_rem:
         cache["rem"] = [
             _init_block_cache(cfg.blocks[n_groups * len(cfg.pattern) + i], cfg,
-                              batch, max_len, cfg.enc_dec)
+                              batch, max_len, cfg.enc_dec, cache_kind)
             for i in range(n_rem)
         ]
     return cache
 
 
-def _decode_block(bp, bc, kind: str, x, pos, cfg: ModelConfig, ctx: ShardCtx):
+def _decode_block(bp, bc, kind: str, x, pos, cfg: ModelConfig, ctx: ShardCtx,
+                  conv_filters=None):
     h = apply_norm(bp["norm1"], x, cfg.norm)
     window = cfg.window if kind == LOCAL_ATTN else 0
     if kind in (ATTN, LOCAL_ATTN):
@@ -347,8 +367,16 @@ def _decode_block(bp, bc, kind: str, x, pos, cfg: ModelConfig, ctx: ShardCtx):
                                           window=window, ctx=ctx)
         bc = dict(bc, **kv)
     elif kind == HYENA:
-        sub = {k: bc[k] for k in ("conv", "x_re", "x_im")}
-        sub, y = hyena_mod.hyena_decode(bp["mix"], sub, h, cfg, ctx=ctx)
+        if "kv" in bc:            # Lemma-2.1 cached-conv baseline (O(t)/token)
+            sub = {k: bc[k] for k in ("conv", "kv")}
+            if conv_filters is None:   # fallback: re-materialize every step
+                conv_filters = hyena_mod.materialize_filters(
+                    bp["mix"]["filter"], bc["kv"].shape[1], cfg.hyena)
+            sub, y = hyena_mod.hyena_decode_cached_conv(
+                bp["mix"], sub, h, pos, cfg, conv_filters, ctx=ctx)
+        else:                     # distilled modal recurrence (O(d)/token)
+            sub = {k: bc[k] for k in ("conv", "x_re", "x_im")}
+            sub, y = hyena_mod.hyena_decode(bp["mix"], sub, h, cfg, ctx=ctx)
         bc = dict(bc, **sub)
     elif kind == MAMBA2:
         sub = {k: bc[k] for k in ("conv", "ssm")}
@@ -377,34 +405,54 @@ def _decode_block(bp, bc, kind: str, x, pos, cfg: ModelConfig, ctx: ShardCtx):
     return bc, x
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX):
-    """One decode step. tokens: (B, 1) int32. Returns (cache, logits)."""
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
+                conv_filters=None):
+    """One decode step. tokens: (B, 1) int32. Returns (cache, logits).
+
+    cache["pos"] is either a scalar (uniform batch: every row at the same
+    position) or a (B,) vector (continuous batching: one position per slot).
+    conv_filters (from `materialize_conv_filters`) supplies pre-materialized
+    long filters for cached-conv Hyena layers; without it each decode step
+    re-runs the filter MLP (hot-loop waste — engines always pass it).
+    """
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-    pos = cache["pos"]
+    pos = jnp.asarray(cache["pos"], jnp.int32)
     x = embed_tokens(params["embed"], tokens, ctx=ctx, dtype=dtype)
     if cfg.rope_theta <= 0.0:
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["embed"]["pos"], pos, 1, axis=0)[None].astype(dtype)[:, 0:1]
+        pe = params["embed"]["pos"]
+        if pos.ndim == 1:
+            x = x + jnp.take(pe, jnp.clip(pos, 0, pe.shape[0] - 1),
+                             axis=0)[:, None, :].astype(dtype)
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                pe, pos, 1, axis=0)[None].astype(dtype)[:, 0:1]
     n_groups, n_rem = layer_layout(cfg)
 
     def body(x, gp_gc):
-        gp, gc = gp_gc
+        gp, gc = gp_gc[0], gp_gc[1]
+        gf = gp_gc[2] if len(gp_gc) > 2 else {}
         for i, kind in enumerate(cfg.pattern):
             gc[f"l{i}"], x = _decode_block(gp[f"l{i}"], gc[f"l{i}"], kind, x,
-                                           pos, cfg, ctx)
+                                           pos, cfg, ctx,
+                                           conv_filters=gf.get(f"l{i}"))
         return x, gc
 
     from repro import flags
     n_g = jax.tree.leaves(params["groups"])[0].shape[0]
-    x, new_group_caches = jax.lax.scan(body, x, (params["groups"], cache["groups"]),
+    xs = (params["groups"], cache["groups"])
+    if conv_filters is not None:
+        xs = xs + (conv_filters["groups"],)
+    x, new_group_caches = jax.lax.scan(body, x, xs,
                                        unroll=flags.scan_unroll(n_g))
     new_cache = {"groups": new_group_caches, "pos": pos + 1}
     if n_rem:
+        rem_filters = (conv_filters or {}).get("rem", {})
         rem = []
         for i in range(n_rem):
             kind = cfg.blocks[n_groups * len(cfg.pattern) + i]
             bc, x = _decode_block(params["rem"][i], cache["rem"][i], kind, x,
-                                  pos, cfg, ctx)
+                                  pos, cfg, ctx,
+                                  conv_filters=rem_filters.get(i))
             rem.append(bc)
         new_cache["rem"] = rem
     x = apply_norm(params["final_norm"], x, cfg.norm)
@@ -417,16 +465,19 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCT
 # Prefill: full-sequence pass that fills the decode caches
 # ---------------------------------------------------------------------------
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
-            ctx: ShardCtx = NOCTX, frontend=None, moe_impl: str = "dropless"):
+            ctx: ShardCtx = NOCTX, frontend=None, moe_impl: str = "dropless",
+            cache_kind: str = "native"):
     """Process prompt, return (cache, last_logits).
 
     Attention k/v from the forward pass are padded into max_len cache buffers;
     recurrent blocks produce O(1) states directly (Sec. 3.4 fast pre-filling).
+    With cache_kind="conv", Hyena layers cache the k.v product sequence for
+    the Lemma-2.1 cached-conv decode baseline instead of the modal state.
     """
     B, T = tokens.shape
     logits, _, (scan_caches, rem_caches) = forward(
         params, tokens, cfg, ctx=ctx, frontend=frontend, moe_impl=moe_impl,
-        collect_cache=True, remat="none")
+        collect_cache=True, remat="none", cache_kind=cache_kind)
     if frontend is not None and not cfg.enc_dec:
         T = T + frontend.shape[1]              # VLM: patches occupy kv positions
 
@@ -456,13 +507,17 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
                 if eff < max_len:
                     ring, sp = to_ring(v.astype(jnp.bfloat16), seq_axis, eff)
                     out[k] = ring
-                    if seq_axis == 2:    # stacked groups: (n_groups, eff)
-                        sp = jnp.broadcast_to(sp, (v.shape[0], eff))
+                    # slot_pos is per batch row: (B, eff) / (n_groups, B, eff)
+                    sp = jnp.broadcast_to(sp, v.shape[:seq_axis - 1] + (B, eff))
                     out["slot_pos"] = sp
                 else:
                     pad = [(0, 0)] * v.ndim
                     pad[seq_axis] = (0, max_len - v.shape[seq_axis])
                     out[k] = jnp.pad(v.astype(jnp.bfloat16), pad)
+            elif k == "kv":                    # hyena cached-conv kv products
+                pad = [(0, 0)] * v.ndim
+                pad[seq_axis] = (0, max_len - v.shape[seq_axis])
+                out[k] = jnp.pad(v, pad)
             elif k in ("cross_k", "cross_v"):
                 out[k] = v.astype(jnp.bfloat16)
             elif k != "slot_pos":
@@ -479,3 +534,80 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
             for i, rc in enumerate(rem_caches)
         ]
     return cache, logits[:, -1, :]
+
+
+def materialize_conv_filters(params, cfg: ModelConfig, max_len: int):
+    """Pre-materialize every Hyena layer's long filters at max_len for the
+    cached-conv decode path. One-time engine-setup cost; pass the result to
+    `decode_step(conv_filters=...)` so the hot loop doesn't re-run the
+    filter MLP each token. Layout mirrors the cache: {"groups": {l_i:
+    (h (G,M,L), h0 (G,M))}, "rem": {i: (h, h0)}}."""
+    hcfg = cfg.hyena
+    n_groups, n_rem = layer_layout(cfg)
+    out: Dict[str, Any] = {"groups": {}}
+    for i, kind in enumerate(cfg.pattern):
+        if kind == HYENA:
+            out["groups"][f"l{i}"] = jax.vmap(
+                lambda fp: hyena_mod.materialize_filters(fp, max_len, hcfg))(
+                    params["groups"][f"l{i}"]["mix"]["filter"])
+    rem = {}
+    for i in range(n_rem):
+        if cfg.blocks[n_groups * len(cfg.pattern) + i] == HYENA:
+            rem[i] = hyena_mod.materialize_filters(
+                params["rem"][i]["mix"]["filter"], max_len, hcfg)
+    if rem:
+        out["rem"] = rem
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Slot-indexed cache helpers (continuous-batching serving engine)
+#
+# A pooled cache (init_cache(..., per_slot=True)) holds one request per batch
+# row ("slot"). Admission scatters a freshly prefilled batch=1 cache into a
+# free slot; eviction just frees the slot — its stale state is fully
+# overwritten on readmission (reset_cache_slot exists for explicit hygiene).
+# ---------------------------------------------------------------------------
+def _slot_update(axis: int, slot):
+    def f(pool_leaf, single_leaf):
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool_leaf, single_leaf.astype(pool_leaf.dtype), slot, axis=axis)
+    return f
+
+
+def write_cache_slot(pool, single, slot):
+    """Scatter a batch=1 cache (from `prefill`) into row `slot` of a pooled
+    per-slot cache. Group leaves carry a leading layer axis, so their batch
+    axis is 1; remainder leaves and `pos` use axis 0. jit-friendly (traced
+    `slot`)."""
+    slot = jnp.asarray(slot, jnp.int32)
+    out = {"groups": jax.tree.map(_slot_update(1, slot), pool["groups"],
+                                  single["groups"]),
+           "pos": pool["pos"].at[slot].set(
+               jnp.asarray(single["pos"], jnp.int32))}
+    if "rem" in pool:
+        out["rem"] = jax.tree.map(_slot_update(0, slot), pool["rem"],
+                                  single["rem"])
+    return out
+
+
+def reset_cache_slot(pool, slot):
+    """Zero row `slot` of a pooled cache (ring slot_pos rows to -1, pos 0)."""
+    from jax.tree_util import DictKey, tree_map_with_path
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def rz(axis: int):
+        def f(path, leaf):
+            is_sp = any(isinstance(k, DictKey) and k.key == "slot_pos"
+                        for k in path)
+            row = jnp.full(leaf.shape[:axis] + (1,) + leaf.shape[axis + 1:],
+                           -1 if is_sp else 0, leaf.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(leaf, row, slot,
+                                                       axis=axis)
+        return f
+
+    out = {"groups": tree_map_with_path(rz(1), pool["groups"]),
+           "pos": pool["pos"].at[slot].set(0)}
+    if "rem" in pool:
+        out["rem"] = tree_map_with_path(rz(0), pool["rem"])
+    return out

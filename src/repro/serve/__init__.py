@@ -1,2 +1,6 @@
-from repro.serve.engine import GenerationEngine  # noqa: F401
-from repro.serve.sampling import sample_token    # noqa: F401
+from repro.serve.engine import GenerationEngine                    # noqa: F401
+from repro.serve.sampling import sample_token, sample_token_slots  # noqa: F401
+from repro.serve.scheduler import (ContinuousBatchingEngine,       # noqa: F401
+                                   Request, SamplingParams,
+                                   run_request_stream,
+                                   synthesize_request_stream)

@@ -1,14 +1,17 @@
 """Auto-regressive generation engine (paper Sec. 2.2 / 3.4 / 5.4).
 
 Drives prefill + decode for every architecture in the pool. For LCSMs the
-engine exposes the paper's three deployment modes:
+engine exposes the paper's deployment modes:
 
   * "distilled"   — LaughingHyena recurrent mode: O(d) per token, O(d) state
   * "cached_conv" — Lemma 2.1 baseline: O(t) per token, O(L) kv-product cache
   * (transformers use their native kv cache; SSM/hybrid their native state)
 
-The decode loop is a single jitted step re-invoked from Python (the
-benchmark harness also provides a fully-jitted lax.scan loop for timing).
+Both modes run through the same jitted `prefill` / `decode_step` pair — the
+mode only selects which cache the Hyena layers carry (`cache_kind`). The
+decode loop is a single jitted step re-invoked from Python; `generate_scanned`
+provides a fully-jitted lax.scan loop for benchmarks. Multi-request serving
+with per-slot state lives in `repro.serve.scheduler`.
 """
 from __future__ import annotations
 
@@ -18,27 +21,56 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import HYENA, ModelConfig
-from repro.models.hyena import (hyena_decode_cached_conv, init_hyena_conv_cache,
-                                materialize_filters)
-from repro.models.layers import NOCTX, ShardCtx, apply_norm, embed_tokens, unembed
-from repro.models.model import (decode_step, init_cache, layer_layout, prefill)
+from repro.configs.base import ModelConfig
+from repro.models.layers import NOCTX, ShardCtx
+from repro.models.model import (decode_step, materialize_conv_filters,
+                                prefill)
 from repro.serve.sampling import sample_token
+
+# Shared jit memo: engines are cheap throwaway objects (tests/benchmarks
+# build many), but functools.partial defeats jax's jit cache — so the jitted
+# decode/prefill callables are memoized per (cfg, max_len, cache_kind, ctx)
+# and shared across GenerationEngine and ContinuousBatchingEngine instances.
+_JIT_CACHE: Dict = {}
+
+
+def jitted_decode_step(cfg: ModelConfig, ctx: ShardCtx = NOCTX):
+    key = ("decode", cfg, id(ctx))
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(decode_step, cfg=cfg, ctx=ctx),
+            donate_argnums=(1,))
+    return _JIT_CACHE[key]
+
+
+def jitted_prefill(cfg: ModelConfig, max_len: int, cache_kind: str = "native",
+                   ctx: ShardCtx = NOCTX):
+    key = ("prefill", cfg, max_len, cache_kind, id(ctx))
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(prefill, cfg=cfg, max_len=max_len, ctx=ctx,
+                              cache_kind=cache_kind))
+    return _JIT_CACHE[key]
 
 
 class GenerationEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_len: int = 4096,
                  ctx: ShardCtx = NOCTX, mode: str = "distilled"):
+        if mode not in ("distilled", "cached_conv"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "cached_conv" and cfg.hyena is None:
+            raise ValueError("cached_conv mode requires a Hyena (LCSM) arch")
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.ctx = ctx
         self.mode = mode
-        self._decode = jax.jit(
-            functools.partial(decode_step, cfg=cfg, ctx=ctx),
-            donate_argnums=(1,))
-        self._prefill = jax.jit(
-            functools.partial(prefill, cfg=cfg, max_len=max_len, ctx=ctx))
+        self.cache_kind = "conv" if mode == "cached_conv" else "native"
+        self._decode = jitted_decode_step(cfg, ctx)
+        self._prefill = jitted_prefill(cfg, max_len, self.cache_kind, ctx)
+        # cached-conv mode: materialize the long filters once, not per token
+        self._conv_filters = (materialize_conv_filters(params, cfg, max_len)
+                              if self.cache_kind == "conv" else None)
 
     def generate(self, key, prompt: jnp.ndarray, n_tokens: int, *,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
@@ -54,7 +86,8 @@ class GenerationEngine:
             nxt = sample_token(sub, logits, temperature=temperature,
                                top_k=top_k, top_p=top_p)
             toks.append(nxt)
-            cache, logits = self._decode(self.params, cache, nxt[:, None])
+            cache, logits = self._decode(self.params, cache, nxt[:, None],
+                                         conv_filters=self._conv_filters)
             logits = logits[:, 0, :]
         return jnp.stack(toks, axis=1), {"cache_bytes": _tree_bytes(cache)}
 
@@ -62,18 +95,20 @@ class GenerationEngine:
     def generate_scanned(self, key, prompt: jnp.ndarray, n_tokens: int,
                          frontend: Optional[jnp.ndarray] = None):
         """Fully-jitted greedy generation (used by benchmarks)."""
-        cfg, ctx = self.cfg, self.ctx
+        cfg, ctx, cache_kind = self.cfg, self.ctx, self.cache_kind
+        conv_filters = self._conv_filters
 
         @jax.jit
         def run(params, prompt):
             cache, last_logits = prefill(params, prompt, cfg,
                                          max_len=self.max_len, ctx=ctx,
-                                         frontend=frontend)
+                                         frontend=frontend,
+                                         cache_kind=cache_kind)
             def body(carry, _):
                 cache, logits = carry
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 cache, lg = decode_step(params, cache, nxt[:, None], cfg,
-                                        ctx=ctx)
+                                        ctx=ctx, conv_filters=conv_filters)
                 return (cache, lg[:, 0, :]), nxt
 
             (_, _), toks = jax.lax.scan(body, (cache, last_logits), None,
@@ -81,60 +116,6 @@ class GenerationEngine:
             return jnp.moveaxis(toks, 0, 1)
 
         return run(self.params, prompt)
-
-
-# ---------------------------------------------------------------------------
-# Cached-convolution baseline for LCSMs (Lemma 2.1) — used by benchmarks to
-# reproduce the paper's quadratic-vs-recurrent comparison.
-# ---------------------------------------------------------------------------
-class CachedConvHyenaEngine:
-    """Single-layer-stack Hyena decode with the O(t)-per-token kv cache."""
-
-    def __init__(self, params, cfg: ModelConfig, max_len: int = 4096,
-                 ctx: ShardCtx = NOCTX):
-        assert all(b == HYENA for b in cfg.blocks)
-        self.params = params
-        self.cfg = cfg
-        self.max_len = max_len
-        self.ctx = ctx
-        n_groups, _ = layer_layout(cfg)
-        # pre-materialize filters at max_len for every layer group
-        hcfg = cfg.hyena
-        self.filters = jax.vmap(
-            lambda fp: materialize_filters(fp, max_len, hcfg))(
-                params["groups"]["l0"]["mix"]["filter"])
-
-    def init_caches(self, batch: int):
-        n_groups, _ = layer_layout(self.cfg)
-        one = init_hyena_conv_cache(batch, self.max_len, self.cfg)
-        return jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), one)
-
-    @functools.partial(jax.jit, static_argnums=(0,))
-    def step(self, caches, x_tok, pos):
-        """x_tok: (B, 1) int32; caches stacked over groups."""
-        cfg, ctx = self.cfg, self.ctx
-        params = self.params
-        x = embed_tokens(params["embed"], x_tok,
-                         dtype=jnp.float32)
-
-        def body(x, inp):
-            gp, gc, (h, h0) = inp
-            bp = gp["l0"]
-            hnorm = apply_norm(bp["norm1"], x, cfg.norm)
-            gc, y = hyena_decode_cached_conv(bp["mix"], gc, hnorm, pos, cfg,
-                                             (h, h0), ctx=ctx)
-            x = x + y
-            hnorm = apply_norm(bp["norm2"], x, cfg.norm)
-            from repro.models.layers import apply_mlp
-            x = x + apply_mlp(bp["mlp"], hnorm, cfg.act, ctx=ctx)
-            return x, gc
-
-        x, caches = jax.lax.scan(body, x, (params["groups"], caches,
-                                           self.filters))
-        x = apply_norm(params["final_norm"], x, cfg.norm)
-        logits = unembed(params["embed"], x, cfg.tie_embeddings, ctx=ctx)
-        return caches, logits[:, 0, :]
 
 
 def _tree_bytes(tree) -> int:

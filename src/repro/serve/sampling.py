@@ -1,4 +1,10 @@
-"""Token sampling: greedy, temperature, top-k, top-p (nucleus)."""
+"""Token sampling: greedy, temperature, top-k, top-p (nucleus).
+
+`sample_token` takes python-scalar params shared across the batch (one
+request replicated, or homogeneous batches). `sample_token_slots` takes
+per-row (B,) parameter vectors — the continuous-batching engine serves
+requests with heterogeneous sampling params in one batched step.
+"""
 from __future__ import annotations
 
 import jax
@@ -7,19 +13,46 @@ import jax.numpy as jnp
 
 def sample_token(key, logits, *, temperature: float = 1.0, top_k: int = 0,
                  top_p: float = 1.0):
-    """logits: (B, V) -> (B,) int32."""
+    """logits: (B, V) -> (B,) int32. One pipeline: scalar params broadcast
+    into the per-slot implementation so the two paths can never diverge."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits.astype(jnp.float32) / temperature
-    if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
-        logits = jnp.where(logits < kth, -jnp.inf, logits)
-    if top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(sorted_logits, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1)
-        # smallest set with cumulative prob >= top_p
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    B = logits.shape[0]
+    return sample_token_slots(
+        key, logits,
+        temperature=jnp.full((B,), temperature, jnp.float32),
+        top_k=jnp.full((B,), top_k, jnp.int32),
+        top_p=jnp.full((B,), top_p, jnp.float32))
+
+
+def sample_token_slots(key, logits, *, temperature, top_k, top_p):
+    """Per-slot sampling. logits: (B, V); temperature/top_k/top_p: (B,).
+
+    Rows with temperature <= 0 are greedy; top_k <= 0 / top_p >= 1 disable
+    the respective filter for that row. Each row draws from its own PRNG
+    stream (split of `key`) so one slot's draw never perturbs another's.
+    """
+    B, V = logits.shape
+    temperature = jnp.asarray(temperature, jnp.float32)
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    lg = logits.astype(jnp.float32) / jnp.clip(temperature, 1e-6)[:, None]
+    # per-row top-k: the k-th largest value is the row's cutoff (k<=0 -> V)
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V)
+    srt = jnp.sort(lg, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(srt, (k_eff - 1)[:, None], axis=-1)
+    lg = jnp.where(lg < kth, -jnp.inf, lg)
+    # per-row top-p over the filtered logits (mirrors sample_token)
+    srt2 = jnp.sort(lg, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(srt2, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.sum(cum < top_p[:, None], axis=-1)
+    cutoff = jnp.take_along_axis(srt2, jnp.clip(cutoff_idx, 0, V - 1)[:, None],
+                                 axis=-1)
+    lg = jnp.where((top_p[:, None] < 1.0) & (lg < cutoff), -jnp.inf, lg)
+
+    keys = jax.random.split(key, B)
+    sampled = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)

@@ -1,0 +1,369 @@
+"""Continuous-batching scheduler: a fixed pool of B state slots.
+
+The paper's point of distilling Hyena filters into modal SSMs is O(1)
+compute/memory per token at decode — which makes multi-request serving a
+*slot* problem rather than a paged-KV problem: every request's entire decode
+state is a fixed-size row of a pooled cache (modal SSM state, conv tail, or
+kv/conv buffers for the baseline modes). This module schedules requests onto
+those rows:
+
+  * admission   — a queued request is prefilled (batch=1 forward) and its
+                  cache scattered into a free slot (`write_cache_slot`);
+  * decode      — ONE jitted `decode_step` over the full slot pool per tick,
+                  each slot at its own position (per-slot `pos` vector);
+                  inactive slots decode garbage that is ignored and fully
+                  overwritten on readmission;
+  * sampling    — per-slot temperature/top-k/top-p in one batched
+                  `sample_token_slots` call;
+  * eviction    — on EOS or max-new-tokens the slot is freed (and optionally
+                  zeroed) and the next queued request admitted;
+  * interleave  — at most `max_prefills_per_step` admissions happen per tick,
+                  so resident requests keep decoding while a burst of
+                  arrivals prefills.
+
+Deployment modes (paper Sec. 2.2 / 5.4): "distilled" (LaughingHyena modal
+recurrence), "cached_conv" (Lemma 2.1 O(t) baseline), and the native mode of
+non-LCSM archs (attention KV cache, Mamba2/RG-LRU state).
+
+Prompt lengths are prefilled at their exact length, so each distinct length
+compiles one prefill executable (bucket prompt lengths upstream if that
+matters); the pooled decode step compiles exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import unzip
+from repro.models.layers import NOCTX, ShardCtx
+from repro.models.model import (init_cache, materialize_conv_filters,
+                                reset_cache_slot, write_cache_slot)
+from repro.serve.sampling import sample_token, sample_token_slots
+
+QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+
+_SLOT_JITS: Dict[str, Callable] = {}
+
+
+def _jitted_write_slot():
+    if "write" not in _SLOT_JITS:
+        _SLOT_JITS["write"] = jax.jit(write_cache_slot, donate_argnums=(0,))
+    return _SLOT_JITS["write"]
+
+
+def _jitted_reset_slot():
+    if "reset" not in _SLOT_JITS:
+        _SLOT_JITS["reset"] = jax.jit(reset_cache_slot, donate_argnums=(0,))
+    return _SLOT_JITS["reset"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0       # <= 0 -> greedy
+    top_k: int = 0                 # <= 0 -> disabled
+    top_p: float = 1.0             # >= 1 -> disabled
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its lifecycle/latency bookkeeping."""
+    rid: int
+    prompt: np.ndarray                       # (T,) int32
+    max_new_tokens: int
+    sampling: SamplingParams = GREEDY
+    eos_id: Optional[int] = None
+    # --- filled by the engine ---
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    status: str = QUEUED
+    slot: int = -1
+    finish_reason: str = ""
+    t_submit: float = math.nan
+    t_admitted: float = math.nan
+    t_first_token: float = math.nan
+    t_finished: float = math.nan
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def latency(self) -> float:
+        return self.t_finished - self.t_submit
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_submit
+
+
+class ContinuousBatchingEngine:
+    """Slot-pool serving engine. See module docstring.
+
+    `mode`: "distilled" | "cached_conv" (LCSM archs) — non-LCSM archs serve
+    their native cache in either setting. `reset_on_evict` zeroes a slot on
+    eviction (hygiene / debugging; admission overwrites the slot anyway).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
+                 max_len: int = 4096, mode: str = "distilled",
+                 ctx: ShardCtx = NOCTX, seed: int = 0,
+                 max_prefills_per_step: int = 1, reset_on_evict: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
+        if mode not in ("distilled", "cached_conv"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "cached_conv" and cfg.hyena is None:
+            raise ValueError("cached_conv mode requires a Hyena (LCSM) arch")
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.mode = mode
+        self.ctx = ctx
+        self.max_prefills_per_step = max_prefills_per_step
+        self.reset_on_evict = reset_on_evict
+        self._clock = clock
+        self._key = jax.random.PRNGKey(seed)
+        cache_kind = "conv" if mode == "cached_conv" else "native"
+        self.cache, _ = unzip(init_cache(cfg, n_slots, max_len,
+                                         cache_kind=cache_kind, per_slot=True))
+        from repro.serve.engine import jitted_decode_step, jitted_prefill
+        self._decode = jitted_decode_step(cfg, ctx)
+        self._prefill = jitted_prefill(cfg, max_len, cache_kind, ctx)
+        self._write_slot = _jitted_write_slot()
+        self._reset_slot = _jitted_reset_slot()
+        # cached-conv mode: materialize the long filters once, not per token
+        self._conv_filters = (materialize_conv_filters(params, cfg, max_len)
+                              if cache_kind == "conv" else None)
+        # per-slot host-side state
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.active = np.zeros(n_slots, bool)
+        self.last_token = np.zeros(n_slots, np.int32)
+        self.temps = np.zeros(n_slots, np.float32)
+        self.top_ks = np.zeros(n_slots, np.int32)
+        self.top_ps = np.ones(n_slots, np.float32)
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self._next_rid = 0
+        self.stats: Dict[str, int] = {"admitted": 0, "evicted": 0,
+                                      "decode_steps": 0, "prefills": 0}
+
+    # ------------------------------------------------------------------
+    # request intake
+    # ------------------------------------------------------------------
+    def submit(self, prompt, *, max_new_tokens: int,
+               sampling: SamplingParams = GREEDY,
+               eos_id: Optional[int] = None, rid: Optional[int] = None
+               ) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        req = Request(rid=self._next_rid if rid is None else rid,
+                      prompt=prompt, max_new_tokens=max_new_tokens,
+                      sampling=sampling, eos_id=eos_id)
+        self._next_rid = max(self._next_rid, req.rid) + 1
+        return self.submit_request(req)
+
+    def submit_request(self, req: Request) -> Request:
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        w = (self.cfg.hyena.short_conv - 1) if self.cfg.hyena else 1
+        if req.prompt_len < max(w, 1):
+            raise ValueError(f"prompt shorter than the short-conv tail ({w})")
+        if req.prompt_len + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {req.prompt_len + req.max_new_tokens} "
+                f"positions > max_len={self.max_len}")
+        req.status = QUEUED
+        req.t_submit = self._clock()
+        self.queue.append(req)
+        return req
+
+    # ------------------------------------------------------------------
+    # scheduling
+    # ------------------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def n_free(self) -> int:
+        return self.n_slots - self.n_active
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def _free_slot(self) -> Optional[int]:
+        for b in range(self.n_slots):
+            if not self.active[b]:
+                return b
+        return None
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def step(self) -> int:
+        """One scheduler tick: admit up to max_prefills_per_step queued
+        requests into free slots, then one pooled decode step. Returns the
+        number of tokens emitted this tick."""
+        admitted = 0
+        while (self.queue and admitted < self.max_prefills_per_step
+               and self._free_slot() is not None):
+            self._admit(self.queue.popleft(), self._free_slot())
+            admitted += 1
+        emitted = admitted            # each admission emits its first token
+        if self.n_active > 0:
+            emitted += self._decode_all()
+        return emitted
+
+    def run(self) -> List[Request]:
+        """Drain queue + residents to completion; returns finished requests."""
+        while self.has_work:
+            self.step()
+        return self.finished
+
+    def warmup(self, prompt_lens: Sequence[int]) -> None:
+        """Compile the prefill executable for each prompt length and the
+        pooled decode step, so a timed run measures steady-state serving.
+        Side effect: idle slots advance one (ignored) decode position."""
+        for L in sorted(set(int(x) for x in prompt_lens)):
+            jax.block_until_ready(
+                self._prefill(self.params, jnp.zeros((1, L), jnp.int32)))
+        self.cache, _ = self._decode(self.params, self.cache,
+                                     jnp.asarray(self.last_token)[:, None],
+                                     conv_filters=self._conv_filters)
+        jax.block_until_ready(self.cache)
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request, slot: int) -> None:
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        cache1, logits = self._prefill(self.params, prompt)
+        self.cache = self._write_slot(self.cache, cache1, slot)
+        self.stats["prefills"] += 1
+        self.stats["admitted"] += 1
+        req.status = RUNNING
+        req.slot = slot
+        req.t_admitted = self._clock()
+        self.slots[slot] = req
+        self.active[slot] = True
+        sp = req.sampling
+        self.temps[slot] = sp.temperature
+        self.top_ks[slot] = sp.top_k
+        self.top_ps[slot] = sp.top_p
+        # first generated token comes from the prefill logits (same
+        # convention as GenerationEngine.generate)
+        tok = sample_token(self._next_key(), logits,
+                           temperature=sp.temperature, top_k=sp.top_k,
+                           top_p=sp.top_p)
+        self._append_token(slot, int(tok[0]))
+
+    def _decode_all(self) -> int:
+        toks = jnp.asarray(self.last_token)[:, None]
+        self.cache, logits = self._decode(self.params, self.cache, toks,
+                                          conv_filters=self._conv_filters)
+        self.stats["decode_steps"] += 1
+        nxt = sample_token_slots(self._next_key(), logits[:, 0, :],
+                                 temperature=jnp.asarray(self.temps),
+                                 top_k=jnp.asarray(self.top_ks),
+                                 top_p=jnp.asarray(self.top_ps))
+        nxt = np.asarray(nxt)
+        emitted = 0
+        for b in np.nonzero(self.active)[0]:
+            self._append_token(int(b), int(nxt[b]))
+            emitted += 1
+        return emitted
+
+    def _append_token(self, slot: int, tok: int) -> None:
+        req = self.slots[slot]
+        assert req is not None
+        if math.isnan(req.t_first_token):
+            req.t_first_token = self._clock()
+        req.tokens.append(tok)
+        self.last_token[slot] = tok
+        if req.eos_id is not None and tok == req.eos_id:
+            self._evict(slot, "eos")
+        elif len(req.tokens) >= req.max_new_tokens:
+            self._evict(slot, "max_tokens")
+
+    def _evict(self, slot: int, reason: str) -> None:
+        req = self.slots[slot]
+        req.status = FINISHED
+        req.finish_reason = reason
+        req.t_finished = self._clock()
+        req.slot = -1
+        self.slots[slot] = None
+        self.active[slot] = False
+        self.temps[slot] = 0.0
+        self.top_ks[slot] = 0
+        self.top_ps[slot] = 1.0
+        self.stats["evicted"] += 1
+        self.finished.append(req)
+        if self.reset_on_evict:
+            self.cache = self._reset_slot(self.cache, slot)
+
+
+# ---------------------------------------------------------------------------
+# Request-stream workload: Poisson arrivals, mixed prompt lengths.
+# ---------------------------------------------------------------------------
+def synthesize_request_stream(rng: np.random.Generator, n_requests: int, *,
+                              rate: float, prompt_lens: Sequence[int],
+                              gen_tokens: Tuple[int, int], vocab: int,
+                              sampling: SamplingParams = GREEDY,
+                              eos_id: Optional[int] = None
+                              ) -> List[Tuple[float, Request]]:
+    """(arrival_time_s, Request) pairs: exponential inter-arrival gaps at
+    `rate` req/s, prompt lengths drawn from `prompt_lens`, generation lengths
+    uniform over [gen_tokens[0], gen_tokens[1]]."""
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        plen = int(rng.choice(np.asarray(prompt_lens)))
+        n_gen = int(rng.integers(gen_tokens[0], gen_tokens[1] + 1))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        out.append((t, Request(rid=rid, prompt=prompt, max_new_tokens=n_gen,
+                               sampling=sampling, eos_id=eos_id)))
+    return out
+
+
+def run_request_stream(engine: ContinuousBatchingEngine,
+                       stream: Sequence[Tuple[float, Request]],
+                       *, clock: Callable[[], float] = time.monotonic
+                       ) -> Dict[str, float]:
+    """Replay a timed request stream through the engine and report
+    tokens/s plus p50/p99 end-to-end and first-token latency."""
+    pending = sorted(stream, key=lambda p: p[0])
+    t0 = clock()
+    i = 0
+    while i < len(pending) or engine.has_work:
+        now = clock() - t0
+        while i < len(pending) and pending[i][0] <= now:
+            engine.submit_request(pending[i][1])
+            i += 1
+        if engine.has_work:
+            engine.step()
+        elif i < len(pending):
+            time.sleep(min(1e-3, max(0.0, pending[i][0] - (clock() - t0))))
+    wall = clock() - t0
+    done = engine.finished
+    lat = np.asarray([r.latency for r in done])
+    ttft = np.asarray([r.ttft for r in done])
+    n_tokens = int(sum(len(r.tokens) for r in done))
+    return {
+        "n_requests": float(len(done)),
+        "n_tokens": float(n_tokens),
+        "wall_s": wall,
+        "tok_per_s": n_tokens / wall if wall > 0 else float("inf"),
+        "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else math.nan,
+        "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else math.nan,
+        "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else math.nan,
+        "p99_ttft_s": float(np.percentile(ttft, 99)) if len(ttft) else math.nan,
+    }

@@ -12,6 +12,13 @@ from repro.optim.adamw import adamw_init, adamw_update
 
 ARCHS = sorted(list_archs())
 
+# tier-1 runs one arch per family (LCSM / dense attention / SSM / hybrid);
+# the full 14-arch matrix is tier-2 (`-m slow` / make test-all).
+FAST_ARCHS = {"multihyena-153m", "llama3.2-3b", "mamba2-130m",
+              "recurrentgemma-9b"}
+ARCHS_TIERED = [pytest.param(a, marks=() if a in FAST_ARCHS
+                             else pytest.mark.slow) for a in ARCHS]
+
 
 def _setup(arch, dtype="bfloat16"):
     cfg = smoke_config(get_config(arch)).replace(dtype=dtype)
@@ -24,7 +31,7 @@ def _setup(arch, dtype="bfloat16"):
     return cfg, params, toks, fe
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCHS_TIERED)
 def test_forward_shapes_no_nan(arch):
     cfg, params, toks, fe = _setup(arch)
     logits, aux = forward(params, toks, cfg, frontend=fe)
@@ -33,6 +40,7 @@ def test_forward_shapes_no_nan(arch):
     assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_improves(arch):
     """One gradient step reduces loss on the same batch (sanity of grads)."""
@@ -52,7 +60,7 @@ def test_train_step_improves(arch):
     assert float(l1) < float(l0), (arch, float(l0), float(l1))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCHS_TIERED)
 def test_prefill_decode_runs(arch):
     cfg, params, toks, fe = _setup(arch)
     cache, last = prefill(params, toks, cfg, max_len=64, frontend=fe)

@@ -5,6 +5,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# every arch in the pool x python-loop decode: ~90s — tier-2. The fast suite
+# covers the same mode-switch invariant via test_scheduler (pooled vs
+# sequential decode) and test_archs_smoke::test_prefill_decode_runs.
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config, smoke_config
 from repro.distributed.sharding import unzip
 from repro.models.model import decode_step, forward, init_params, prefill

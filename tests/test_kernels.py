@@ -80,6 +80,7 @@ def test_flash_attention_noncausal():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
 
+@pytest.mark.slow
 def test_chunked_mha_matches_ref_paths():
     """The portable chunked path and the unrolled dry-run path agree with the
     dense reference (both window and full causal)."""

@@ -16,6 +16,7 @@ def system():
     return init_modal(jax.random.PRNGKey(0), (3,), 5, r_minmax=(0.4, 0.9))
 
 
+@pytest.mark.slow
 def test_prefill_strategies_agree(system):
     u = jax.random.normal(jax.random.PRNGKey(1), (3, 128))
     xr = prefill_recurrent(system, u)

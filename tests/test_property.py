@@ -1,8 +1,15 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+The whole module is skipped cleanly when `hypothesis` isn't installed
+(it's a dev-only dependency; see requirements-dev.txt).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import eval_filter, init_modal
 from repro.core.modal import ModalSSM, modal_step

@@ -15,6 +15,7 @@ from repro.optim.adamw import adamw_init, adamw_update, cosine_schedule
 from repro.train.checkpoint import Checkpointer
 
 
+@pytest.mark.slow
 def test_moe_dense_equals_dropless():
     """The two MoE implementations are numerically equivalent."""
     mcfg = MoEConfig(n_experts=8, top_k=2)
@@ -28,6 +29,7 @@ def test_moe_dense_equals_dropless():
     np.testing.assert_allclose(float(a1), float(a2), rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_moe_dropless_grads_flow():
     mcfg = MoEConfig(n_experts=4, top_k=2)
     from repro.distributed.sharding import unzip
@@ -70,6 +72,7 @@ def test_checkpoint_atomicity_and_restore(tmp_path):
     assert ck.latest_step() == 15
 
 
+@pytest.mark.slow
 def test_adamw_converges_quadratic():
     params = {"w": jnp.asarray([5.0, -3.0])}
     opt = adamw_init(params)
@@ -90,6 +93,7 @@ def test_grad_clipping():
     assert float(norm) > 100.0
 
 
+@pytest.mark.slow
 def test_train_restart_resumes(tmp_path):
     """Injected failure + restart completes training deterministically."""
     from repro.configs import get_config, smoke_config

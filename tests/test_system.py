@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow    # full train->distill->serve pipeline (~40s)
+
 from repro.configs import get_config, smoke_config
 from repro.core.distill import distill_model
 from repro.data.pipeline import SyntheticLM, make_batches
