@@ -16,5 +16,7 @@ test-slow:
 bench:
 	$(PY) -m benchmarks.run
 
+# serving perf trajectory: tok/s, latency/TTFT percentiles, and prefill
+# compile counts per mode, written to BENCH_serve.json for cross-PR tracking
 bench-serve:
-	$(PY) -m benchmarks.run --only serve_stream
+	$(PY) -m benchmarks.run --only serve_stream --json BENCH_serve.json

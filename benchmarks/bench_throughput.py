@@ -55,19 +55,30 @@ def main(out):
 # Request-stream serving benchmark (continuous batching)
 # ---------------------------------------------------------------------------
 N_REQ, RATE = 16, 40.0
-PROMPT_LENS = (32, 64, 128)
+PROMPT_LENS = (32, 48, 64, 96, 128)     # 5 distinct lengths, 3 buckets
 GEN_TOKENS = (16, 48)
 N_SLOTS, MAX_LEN = 4, 192
+PREFILL_BATCH = 2
 
 
 def _stream_case(cfg, params, mode):
+    from repro.serve.metrics import count_compiles
     eng = ContinuousBatchingEngine(params, cfg, n_slots=N_SLOTS,
-                                   max_len=MAX_LEN, mode=mode)
+                                   max_len=MAX_LEN, mode=mode,
+                                   max_prefills_per_step=PREFILL_BATCH)
     eng.warmup(PROMPT_LENS)
     stream = synthesize_request_stream(
         np.random.default_rng(0), N_REQ, rate=RATE, prompt_lens=PROMPT_LENS,
         gen_tokens=GEN_TOKENS, vocab=cfg.vocab)
-    return run_request_stream(eng, stream)
+    with count_compiles() as scope:
+        m = run_request_stream(eng, stream)
+    cs = eng.prefill_compile_stats()
+    m["prefill_executables"] = cs["prefill_executables"]
+    m["n_buckets"] = len(cs["buckets_used"])
+    m["steady_state_compiles"] = scope.compiles
+    m["prefill_calls"] = eng.stats["prefill_calls"]
+    m["prefills"] = eng.stats["prefills"]
+    return m
 
 
 def stream_main(out):
@@ -75,13 +86,22 @@ def stream_main(out):
     hparams = build(hcfg, distill=True)
     tcfg = transformer_cfg()
     tparams = build(tcfg)
+    results = {"prompt_lens": list(PROMPT_LENS), "n_requests": N_REQ,
+               "rate_req_s": RATE, "n_slots": N_SLOTS,
+               "prefill_batch": PREFILL_BATCH, "modes": {}}
     for label, cfg, params, mode in (
             ("distilled", hcfg, hparams, "distilled"),
             ("cached_conv", hcfg, hparams, "cached_conv"),
             ("attention_kv", tcfg, tparams, "distilled")):
         m = _stream_case(cfg, params, mode)
+        results["modes"][label] = m
         out(row(f"serve_stream/{label}", m["wall_s"] * 1e6,
                 f"tok_s={m['tok_per_s']:.0f} "
                 f"p50_ms={m['p50_latency_s'] * 1e3:.1f} "
                 f"p99_ms={m['p99_latency_s'] * 1e3:.1f} "
-                f"p50_ttft_ms={m['p50_ttft_s'] * 1e3:.1f}"))
+                f"p50_ttft_ms={m['p50_ttft_s'] * 1e3:.1f} "
+                f"p99_ttft_ms={m['p99_ttft_s'] * 1e3:.1f} "
+                f"prefill_exec={m['prefill_executables']}"
+                f"/{len(PROMPT_LENS)}lens "
+                f"compiles_in_run={m['steady_state_compiles']}"))
+    return {"serve_stream": results}

@@ -1,11 +1,15 @@
 """Benchmark driver: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig1.1]
+  PYTHONPATH=src python -m benchmarks.run [--only fig1.1] [--json out.json]
 
-Prints ``name,us_per_call,derived`` CSV rows. All models are width-reduced
-(CPU container); the comparison *structure* matches the paper's figures.
+Prints ``name,us_per_call,derived`` CSV rows. Suites may additionally return
+a structured metrics dict; --json collects those into one file (used by
+`make bench-serve` to track the serving perf trajectory across PRs). All
+models are width-reduced (CPU container); the comparison *structure* matches
+the paper's figures.
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -30,9 +34,12 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write structured suite metrics to this file")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     rows = []
+    data = {}
 
     def out(r):
         print(r, flush=True)
@@ -43,10 +50,16 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         try:
-            fn(out)
+            ret = fn(out)
+            if isinstance(ret, dict):
+                data.update(ret)
         except Exception:
             failures += 1
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+        print(f"[bench] wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -13,6 +13,12 @@ continuous batching; reports tokens/s and p50/p99 latency):
       --distill --stream --n-requests 16 --rate 20 --slots 4 \
       --mode distilled            # or cached_conv
 
+Serving fast path (all on by default in --stream mode): prompt-length
+bucketing (one batched prefill executable per power-of-two bucket), the
+async overlapped tick loop, and optional chunked prefill for long prompts
+(--chunk N). --no-bucket / --sync-loop restore the legacy per-length,
+fully-synchronous engine for comparison.
+
 For LCSM archs, --distill runs LaughingHyena distillation before serving
 (recurrent O(d) decode); without it the model still serves via the distilled
 slot's random init (useless outputs) — so in practice always pass --distill
@@ -66,6 +72,18 @@ def main():
     ap.add_argument("--prompt-lens", type=str, default=None,
                     help="comma list of prompt lengths (default: "
                          "prompt-len/2,prompt-len)")
+    # serving fast path
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="disable prompt-length bucketing (compile one "
+                         "prefill executable per distinct length)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="chunked prefill: prompts longer than this run "
+                         "through the resumable chunk executable, one chunk "
+                         "per tick")
+    ap.add_argument("--sync-loop", action="store_true",
+                    help="disable the async overlapped host loop")
+    ap.add_argument("--prefills-per-step", type=int, default=2,
+                    help="max admissions per tick == bucketed prefill batch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -112,8 +130,15 @@ def _serve_stream(params, cfg, args):
     max_len = max(plens) + args.gen
     eng = ContinuousBatchingEngine(params, cfg, n_slots=args.slots,
                                    max_len=max_len, mode=args.mode,
-                                   seed=args.seed)
-    print(f"[serve] warming up prefill lengths {plens} + decode step ...")
+                                   seed=args.seed,
+                                   bucket_prompts=not args.no_bucket,
+                                   prefill_chunk=args.chunk,
+                                   overlap=not args.sync_loop,
+                                   max_prefills_per_step=args.prefills_per_step)
+    print(f"[serve] warming up prompt lengths {plens} "
+          f"({'bucketed' if not args.no_bucket else 'exact-length'} prefill"
+          f"{', chunk=%d' % args.chunk if args.chunk else ''}, "
+          f"{'overlapped' if not args.sync_loop else 'sync'} loop) ...")
     eng.warmup(plens)
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                               top_p=args.top_p)
@@ -131,6 +156,7 @@ def _serve_stream(params, cfg, args):
           f"ttft p50={m['p50_ttft_s']*1e3:.1f}ms "
           f"p99={m['p99_ttft_s']*1e3:.1f}ms")
     print(f"[serve] scheduler stats: {eng.stats}")
+    print(f"[serve] prefill compile stats: {eng.prefill_compile_stats()}")
 
 
 if __name__ == "__main__":

@@ -195,8 +195,15 @@ def _chunked_mha_unrolled(q, k, v, *, causal=True, offset=0, window=0,
 
 
 def attention_block(params, x, positions, cfg, *, window=0, ctx: ShardCtx = NOCTX,
-                    cross_kv=None, causal=True, return_kv=False):
-    """Full-sequence attention (train / prefill). x: (B,S,D)."""
+                    cross_kv=None, causal=True, return_kv=False,
+                    kv_valid=None):
+    """Full-sequence attention (train / prefill). x: (B,S,D).
+
+    kv_valid (B, S) marks each row's real (non-padded) positions for
+    bucketed prefill: the k/v returned for the decode cache are zeroed at
+    padded positions. The attention itself needs no extra mask — with right
+    padding, causality already keeps padded keys away from real queries.
+    """
     q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
     if cross_kv is None:
         k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
@@ -229,6 +236,9 @@ def attention_block(params, x, positions, cfg, *, window=0, ctx: ShardCtx = NOCT
                 cross=cross_kv is not None)
     y = jnp.einsum("bsnh,nhd->bsd", o, params["wo"].astype(x.dtype))
     if return_kv:
+        if kv_valid is not None:
+            k = jnp.where(kv_valid[..., None, None], k, 0)
+            v = jnp.where(kv_valid[..., None, None], v, 0)
         return y, (k, v)
     return y
 
@@ -238,6 +248,38 @@ def compute_kv(params, x, positions, cfg):
     k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
     v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
     return k, v
+
+
+# ---------------------------------------------------------------------------
+# Chunked (resumable) prefill: one fixed-size chunk of the prompt at a time
+# ---------------------------------------------------------------------------
+def attention_prefill_chunk(params, cache, x, positions, start, chunk_len,
+                            cfg, *, window=0, ctx: ShardCtx = NOCTX):
+    """Consume one prompt chunk x (B, C, D) starting at absolute position
+    `start` (traced scalar). cache k/v are full-length LINEAR buffers — even
+    for windowed layers, which are re-laid-out into ring form by
+    `finalize_prefill_cache`. Positions of the chunk at index >= chunk_len
+    are padding: their k/v are written as zeros (and excluded from every
+    real query by causality). Returns (cache, y (B, C, D))."""
+    B, C, _ = x.shape
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    k_new = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
+    v_new = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
+    q = apply_rope(q, positions, cfg.rope_theta,
+                   cfg.m_rope_sections if cfg.m_rope else None)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta,
+                       cfg.m_rope_sections if cfg.m_rope else None)
+    valid = (jnp.arange(C) < chunk_len)[None, :, None, None]
+    k_new = jnp.where(valid, k_new, 0).astype(cache["k"].dtype)
+    v_new = jnp.where(valid, v_new, 0).astype(cache["v"].dtype)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, start, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, start, axis=1)
+    # chunk queries against the whole buffer: unfilled keys sit strictly in
+    # the causal future of every chunk query, so kpos <= qpos masks them
+    y = mha(q, k.astype(q.dtype), v.astype(q.dtype), causal=True,
+            offset=start, window=window, ctx=ctx)
+    y = jnp.einsum("bsnh,nhd->bsd", y, params["wo"].astype(x.dtype))
+    return {"k": k, "v": v}, y
 
 
 # ---------------------------------------------------------------------------

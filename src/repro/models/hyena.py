@@ -29,9 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import Param
+from repro.kernels.ssm_decode.ops import ssm_decode
 from repro.models.layers import (
-    NOCTX, ShardCtx, apply_short_conv, dense_init, init_short_conv,
-    short_conv_step,
+    NOCTX, ShardCtx, apply_short_conv, conv_tail_gather, dense_init,
+    init_short_conv, short_conv_chunk, short_conv_step,
 )
 
 
@@ -191,13 +192,28 @@ def modal_poles_residues(dp) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 def hyena_block(params, x, cfg, *, ctx: ShardCtx = NOCTX,
                 filters: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-                return_cache: bool = False, cache_kind: str = "native"):
+                return_cache: bool = False, cache_kind: str = "native",
+                lengths: Optional[jnp.ndarray] = None,
+                filter_len: Optional[int] = None):
     """Full-sequence MultiHyena (train / prefill). x: (B, S, D).
 
     cache_kind selects what `return_cache` collects:
       * "native" — distilled modal SSM state (O(d) recurrent decode);
       * "conv"   — the k.v product sequence for the Lemma-2.1 cached-conv
                    decode baseline (O(t) per token).
+
+    `lengths` (B,) marks per-row true prompt lengths for bucketed (right-
+    padded) prefill: the collected caches are masked/gathered so padded
+    positions never enter the modal state, the conv tail, or the kv buffer.
+    The causal conv itself needs no masking — right padding cannot reach
+    positions < length.
+
+    `filter_len` materializes the implicit filter at a fixed reference
+    length and slices it to S. The implicit filter is a function of
+    normalized time, so its values depend on the materialization length —
+    serving passes filter_len=max_len so exact-length, bucket-padded, and
+    chunked prefill (and the cached-conv decode path) all see identical
+    filter values; training leaves it None (materialize at S, as before).
     """
     B, S, D = x.shape
     qkv = jnp.einsum("bsd,dge->bsge", x, params["wqkv"].astype(x.dtype))
@@ -207,7 +223,9 @@ def hyena_block(params, x, cfg, *, ctx: ShardCtx = NOCTX,
     q, k, v = jnp.split(qkv, 3, axis=-1)
     q = ctx.cs(q, ("batch", None, "qkv"))
     if filters is None:
-        filters = materialize_filters(params["filter"], S, cfg.hyena)
+        Lf = S if filter_len is None else max(int(filter_len), S)
+        filters = materialize_filters(params["filter"], Lf, cfg.hyena)
+        filters = (filters[0][:, :S], filters[1])
     h, h0 = filters                                       # (M, S), (M,)
     kv = ctx.cs(k * v, ("batch", None, "qkv"))
     y = fft_conv_sharded(kv, h, ctx) + \
@@ -216,33 +234,52 @@ def hyena_block(params, x, cfg, *, ctx: ShardCtx = NOCTX,
     out = jnp.einsum("bse,ed->bsd", y, params["wo"].astype(x.dtype))
     if return_cache:
         w = cfg.hyena.short_conv - 1
-        conv = pre_conv[:, S - w:, :].astype(jnp.float32)
+        if lengths is None:
+            conv = pre_conv[:, S - w:, :].astype(jnp.float32)
+            kv_c = kv
+        else:
+            # conv tail = the w positions ending at each row's true length
+            conv = conv_tail_gather(pre_conv, w, lengths).astype(jnp.float32)
+            kv_c = jnp.where(
+                jnp.arange(S)[None, :, None] < lengths[:, None, None], kv, 0)
         if cache_kind == "conv":
-            cache = {"conv": conv, "kv": kv.astype(jnp.float32)}
+            cache = {"conv": conv, "kv": kv_c.astype(jnp.float32)}
         else:
             # modal SSM prefill (Sec. 3.4, O(dT) matmul variant — MXU friendly)
-            xr, xi = modal_prefill_state(params["distilled"], kv, cfg.hyena)
+            xr, xi = modal_prefill_state(params["distilled"], kv_c, cfg.hyena,
+                                         lengths=lengths)
             cache = {"conv": conv, "x_re": xr, "x_im": xi}
         return out, cache
     return out
 
 
-def modal_prefill_state(dp, u, hcfg):
-    """State after consuming u (B, T, D): x_T[n] = sum_t lam_n^{T-1-t} u_t.
+def modal_prefill_state(dp, u, hcfg, lengths=None):
+    """State after consuming u (B, T, D): x_L[n] = sum_{t<L} lam_n^{L-1-t} u_t.
 
     Evaluated as a (d x T) Vandermonde-basis matmul per filter head — the
-    O(dT) strategy of Sec. 3.4, which maps onto the MXU. Returns (re, im)
-    each (B, D, d).
+    O(dT) strategy of Sec. 3.4, which maps onto the MXU. The input is
+    time-reversed first (u_rev[j] = u[L-1-j]) so the basis lam^j is shared
+    across rows; with per-row `lengths` the reversal is a masked gather from
+    each row's true end, which is what makes bucket-padded prefill exact.
+    Returns (re, im) each (B, D, d).
     """
     B, T, D = u.shape
     M, d = dp["log_a"].shape
     N = D // M
-    expo = jnp.arange(T - 1, -1, -1, dtype=jnp.float32)          # T-1-t
+    expo = jnp.arange(T, dtype=jnp.float32)                      # lam^j
     mag = jnp.exp(dp["log_a"][..., None] * expo)                 # (M, d, T)
     ang = dp["theta"][..., None] * expo
     br = mag * jnp.cos(ang)
     bi = mag * jnp.sin(ang)
-    ur = u.reshape(B, T, M, N).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if lengths is None:
+        u_rev = uf[:, ::-1, :]
+    else:
+        idx = lengths[:, None] - 1 - jnp.arange(T)[None, :]      # (B, T)
+        u_rev = jnp.where(idx[..., None] >= 0,
+                          jnp.take_along_axis(uf, jnp.clip(idx, 0)[..., None],
+                                              axis=1), 0.0)
+    ur = u_rev.reshape(B, T, M, N)
     xr = jnp.einsum("btmi,mdt->bmid", ur, br).reshape(B, D, d)
     xi = jnp.einsum("btmi,mdt->bmid", ur, bi).reshape(B, D, d)
     return xr, xi
@@ -283,18 +320,10 @@ def hyena_decode(params, cache, x, cfg, *, ctx: ShardCtx = NOCTX):
 
     # Paper convention (Prop. 3.3): y_t = Re[R . x_t] + h0 u_t, then
     # x_{t+1} = lam x_t + u_t, with x_t holding the state after u_{t-1}.
+    # Dispatch through the ops wrapper: fused Pallas kernel on TPU (one HBM
+    # pass over the state), jnp reference elsewhere.
     xr, xi = cache["x_re"], cache["x_im"]
-    if jax.default_backend() == "tpu":
-        # fused Pallas kernel: one HBM pass over the state (see
-        # repro/kernels/ssm_decode)
-        from repro.kernels.ssm_decode.ops import ssm_decode
-        y, nxr, nxi = ssm_decode(xr, xi, u, log_a, theta, R_re, R_im, h0)
-    else:
-        lam_re = jnp.exp(log_a) * jnp.cos(theta)
-        lam_im = jnp.exp(log_a) * jnp.sin(theta)
-        y = jnp.sum(R_re * xr - R_im * xi, axis=-1) + h0 * u  # (B, D)
-        nxr = lam_re * xr - lam_im * xi + u[..., None]
-        nxi = lam_re * xi + lam_im * xr
+    y, nxr, nxi = ssm_decode(xr, xi, u, log_a, theta, R_re, R_im, h0)
     out = (q.astype(jnp.float32) * y).astype(x.dtype)
     new_cache = {"conv": conv_cache, "x_re": nxr, "x_im": nxi}
     return new_cache, jnp.einsum("be,ed->bd", out, params["wo"].astype(x.dtype))[:, None, :]
@@ -352,6 +381,60 @@ def hyena_decode_cached_conv(params, cache, x, pos, cfg, filters,
     out = (q.astype(jnp.float32) * y).astype(x.dtype)
     new_cache = {"conv": conv_cache, "kv": kv_cache}
     return new_cache, jnp.einsum("be,ed->bd", out, params["wo"].astype(x.dtype))[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Chunked (resumable) prefill: one fixed-size chunk of the prompt at a time
+# ---------------------------------------------------------------------------
+def hyena_prefill_chunk(params, cache, x, start, chunk_len, cfg, filters,
+                        *, ctx: ShardCtx = NOCTX, cache_kind: str = "native"):
+    """Consume one prompt chunk x (B, C, D) starting at absolute position
+    `start` (traced scalar). The cache carries the short-conv tail AND the
+    k.v product history buffer (B, Lbuf, D): the chunk's layer output is the
+    exact causal convolution of the full history with the TRUE long filter
+    (one fft over the zero-padded buffer — a single executable for any
+    prompt length), so chunked prefill matches one-shot prefill, not the
+    distilled approximation. For the "native" kind the distilled modal state
+    is additionally advanced per chunk with the Sec.-3.4 update
+    x <- lam^cl x + sum_{i<cl} lam^{cl-1-i} u_i (the per-chunk Vandermonde
+    form of core/prefill.py). `chunk_len` <= C marks the real positions of a
+    padded final chunk; positions past it write zeros and leave all state
+    untouched.
+    """
+    B, C, D = x.shape
+    h_full, h0 = filters                                   # (M, Lbuf'), (M,)
+    M = h_full.shape[0]
+    qkv = jnp.einsum("bsd,dge->bsge", x, params["wqkv"].astype(x.dtype))
+    qkv = qkv.reshape(B, C, 3 * D)
+    new_tail, qkv = short_conv_chunk(params["short_conv"], cache["conv"], qkv,
+                                     chunk_len)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    valid = (jnp.arange(C) < chunk_len)[None, :, None]
+    kvc = jnp.where(valid, (k * v), 0).astype(cache["kv"].dtype)
+    kv_buf = jax.lax.dynamic_update_slice_in_dim(cache["kv"], kvc, start,
+                                                 axis=1)
+    y = jax.lax.dynamic_slice_in_dim(fft_conv(kv_buf, h_full), start, C,
+                                     axis=1)
+    y = y + kvc * jnp.repeat(h0, D // M)
+    out = (q.astype(jnp.float32) * y).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    new_cache = {"conv": new_tail.astype(cache["conv"].dtype), "kv": kv_buf}
+    if cache_kind != "conv":
+        dp = params["distilled"]
+        N = D // dp["log_a"].shape[0]
+        cl = jnp.asarray(chunk_len, jnp.float32)
+        # decay the incoming state by lam^cl ...
+        scale = jnp.exp(dp["log_a"] * cl)                  # (M, d)
+        lr = jnp.repeat(scale * jnp.cos(dp["theta"] * cl), N, axis=0)
+        li = jnp.repeat(scale * jnp.sin(dp["theta"] * cl), N, axis=0)
+        # ... and add the chunk's own Vandermonde contribution
+        vr, vi = modal_prefill_state(dp, kvc, cfg.hyena,
+                                     lengths=jnp.full((B,), chunk_len,
+                                                      jnp.int32))
+        xr, xi = cache["x_re"], cache["x_im"]
+        new_cache["x_re"] = lr * xr - li * xi + vr
+        new_cache["x_im"] = lr * xi + li * xr + vi
+    return new_cache, out
 
 
 # ---------------------------------------------------------------------------

@@ -189,3 +189,42 @@ def short_conv_step(params, cache, u):
     y = jnp.einsum("bwd,wd->bd", window, w)
     new_cache = window[:, 1:, :] if width > 1 else cache
     return new_cache, y
+
+
+def conv_tail_gather(x, width: int, lengths):
+    """Last `width` rows of x (B, S, D) ending at each row's true length —
+    the short-conv tail a decode cache carries. Positions before the start
+    of the sequence (length < width) are zeros, matching the causal conv's
+    left zero-padding. lengths=None means every row is full length."""
+    if lengths is None:
+        return x[:, x.shape[1] - width:, :]
+    idx = lengths[:, None] - width + jnp.arange(width)[None, :]     # (B, W)
+    out = jnp.take_along_axis(x, jnp.clip(idx, 0)[..., None], axis=1)
+    return jnp.where(idx[..., None] >= 0, out, 0)
+
+
+def short_conv_chunk(params, tail, x, chunk_len=None):
+    """Chunked causal conv with a carried tail (resumable prefill).
+
+    tail: (B, W-1, D) — the W-1 inputs preceding this chunk (zeros for the
+    first chunk, which makes chunk 0 bit-identical to `apply_short_conv`);
+    x: (B, C, D). Returns (new_tail, y (B, C, D)). `chunk_len` (traced
+    scalar) marks how many of the C positions are real: the new tail is the
+    W-1 inputs ending at `chunk_len`, so a padded final chunk leaves the
+    carried state exactly where the prompt ends.
+    """
+    w = params["w"].astype(x.dtype)
+    width = w.shape[0]
+    C = x.shape[1]
+    ext = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, W-1+C, D)
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + ext[:, i:i + C, :] * w[i]
+    if width == 1:
+        return tail, y
+    if chunk_len is None:
+        new_tail = ext[:, C:, :]
+    else:
+        idx = chunk_len + jnp.arange(width - 1)       # ext[chunk_len : +W-1]
+        new_tail = jnp.take(ext, idx, axis=1)
+    return new_tail, y

@@ -116,15 +116,25 @@ def init_params(key, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 def _apply_block(bp, kind: str, x, positions, cfg: ModelConfig, ctx: ShardCtx,
                  *, enc_out=None, moe_impl: str, collect_cache: bool = False,
-                 cross_kv_cache=None, cache_kind: str = "native"):
-    """One block (mix + mlp). Returns (x, aux_loss, cache_or_None)."""
+                 cross_kv_cache=None, cache_kind: str = "native",
+                 lengths=None, filter_len=None):
+    """One block (mix + mlp). Returns (x, aux_loss, cache_or_None).
+
+    `lengths` (B,) marks true per-row prompt lengths for bucketed (right-
+    padded) prefill; it only affects what the collected caches contain —
+    padded positions never reach the SSM states, conv tails, or KV caches.
+    `filter_len` pins the Hyena filter materialization length (serving).
+    """
     h = apply_norm(bp["norm1"], x, cfg.norm)
     cache = None
     window = cfg.window if kind == LOCAL_ATTN else 0
+    kv_valid = (None if lengths is None else
+                jnp.arange(x.shape[1])[None, :] < lengths[:, None])
     if kind in (ATTN, LOCAL_ATTN):
         if collect_cache:
             y, (k, v) = attn_mod.attention_block(
-                bp["mix"], h, positions, cfg, window=window, ctx=ctx, return_kv=True)
+                bp["mix"], h, positions, cfg, window=window, ctx=ctx,
+                return_kv=True, kv_valid=kv_valid)
             cache = {"k": k, "v": v}
         else:
             y = attn_mod.attention_block(bp["mix"], h, positions, cfg,
@@ -133,19 +143,22 @@ def _apply_block(bp, kind: str, x, positions, cfg: ModelConfig, ctx: ShardCtx,
         if collect_cache:
             y, cache = hyena_mod.hyena_block(bp["mix"], h, cfg, ctx=ctx,
                                              return_cache=True,
-                                             cache_kind=cache_kind)
+                                             cache_kind=cache_kind,
+                                             lengths=lengths,
+                                             filter_len=filter_len)
         else:
-            y = hyena_mod.hyena_block(bp["mix"], h, cfg, ctx=ctx)
+            y = hyena_mod.hyena_block(bp["mix"], h, cfg, ctx=ctx,
+                                      filter_len=filter_len)
     elif kind == MAMBA2:
         if collect_cache:
             y, cache = ssm_mod.mamba2_block(bp["mix"], h, cfg, ctx=ctx,
-                                            return_state=True)
+                                            return_state=True, lengths=lengths)
         else:
             y = ssm_mod.mamba2_block(bp["mix"], h, cfg, ctx=ctx)
     elif kind == RGLRU:
         if collect_cache:
             y, cache = ssm_mod.rglru_block(bp["mix"], h, cfg, ctx=ctx,
-                                           return_state=True)
+                                           return_state=True, lengths=lengths)
         else:
             y = ssm_mod.rglru_block(bp["mix"], h, cfg, ctx=ctx)
     else:
@@ -179,7 +192,8 @@ def _apply_block(bp, kind: str, x, positions, cfg: ModelConfig, ctx: ShardCtx,
 def forward(params, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
             frontend: Optional[jnp.ndarray] = None, moe_impl: str = "dropless",
             remat: Optional[str] = "none", collect_cache: bool = False,
-            cache_kind: str = "native"):
+            cache_kind: str = "native", lengths=None,
+            filter_len: Optional[int] = None):
     """Full-sequence forward. tokens: (B, S) int32.
 
     Returns logits (B, S', vocab) and, with collect_cache, the per-layer
@@ -187,7 +201,12 @@ def forward(params, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
     (S' includes them). For enc-dec, `frontend` feeds the encoder.
     cache_kind: "native" (recurrent/kv states) or "conv" (Hyena layers cache
     the k.v product sequence for the Lemma-2.1 cached-conv baseline).
+    `lengths` (B,) supports bucketed prefill: rows are right-padded to S and
+    collected caches are masked to each row's true length.
     """
+    if lengths is not None and frontend is not None:
+        raise ValueError("lengths (bucketed prefill) is incompatible with "
+                         "frontend inputs")
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     x = embed_tokens(params["embed"], tokens, ctx=ctx, dtype=dtype)
     enc_out = None
@@ -209,7 +228,8 @@ def forward(params, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
             x, a, c = _apply_block(gp[f"l{i}"], kind, x, positions, cfg, ctx,
                                    enc_out=enc_out, moe_impl=moe_impl,
                                    collect_cache=collect_cache,
-                                   cache_kind=cache_kind)
+                                   cache_kind=cache_kind, lengths=lengths,
+                                   filter_len=filter_len)
             aux = aux + a
             if collect_cache:
                 caches[f"l{i}"] = c
@@ -235,7 +255,8 @@ def forward(params, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCTX,
         x, a, c = _apply_block(params["rem"][i], kind, x, positions, cfg, ctx,
                                enc_out=enc_out, moe_impl=moe_impl,
                                collect_cache=collect_cache,
-                               cache_kind=cache_kind)
+                               cache_kind=cache_kind, lengths=lengths,
+                               filter_len=filter_len)
         aux = aux + a
         rem_caches.append(c)
     x = apply_norm(params["final_norm"], x, cfg.norm)
@@ -464,38 +485,56 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCT
 # ---------------------------------------------------------------------------
 # Prefill: full-sequence pass that fills the decode caches
 # ---------------------------------------------------------------------------
+def _ring_from_linear(leaf, seq_axis: int, eff: int, lens):
+    """Re-layout a linear (..., T, ...) buffer into ring-slot order.
+
+    Ring slot j of row b holds the absolute position p ≡ j (mod eff) from the
+    window [len_b - eff, len_b); slots whose position is negative (prompt
+    shorter than the ring) are zeroed and marked -1 in slot_pos. The batch
+    axis is seq_axis - 1; lens is (B,). Returns (ring, slot_pos (B, eff)).
+    """
+    B = lens.shape[0]
+    j = jnp.arange(eff)
+    base = lens[:, None] - eff                           # (B, 1), may be < 0
+    p = base + ((j[None, :] - base) % eff)               # (B, eff)
+    valid = p >= 0
+    sp = jnp.where(valid, p, -1).astype(jnp.int32)
+    idx = jnp.clip(p, 0, leaf.shape[seq_axis] - 1)
+    shape = [1] * leaf.ndim
+    shape[seq_axis - 1] = B
+    shape[seq_axis] = eff
+    tgt = leaf.shape[:seq_axis] + (eff,) + leaf.shape[seq_axis + 1:]
+    ring = jnp.take_along_axis(leaf, jnp.broadcast_to(idx.reshape(shape), tgt),
+                               axis=seq_axis)
+    ring = jnp.where(jnp.broadcast_to(valid.reshape(shape), tgt), ring, 0)
+    return ring, sp
+
+
 def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
             ctx: ShardCtx = NOCTX, frontend=None, moe_impl: str = "dropless",
-            cache_kind: str = "native"):
+            cache_kind: str = "native", lengths=None):
     """Process prompt, return (cache, last_logits).
 
     Attention k/v from the forward pass are padded into max_len cache buffers;
     recurrent blocks produce O(1) states directly (Sec. 3.4 fast pre-filling).
     With cache_kind="conv", Hyena layers cache the k.v product sequence for
     the Lemma-2.1 cached-conv decode baseline instead of the modal state.
+
+    `lengths` (B,) enables bucketed batch prefill: rows are right-padded to a
+    shared bucket length T, caches are masked to each row's true length, the
+    cache position becomes a per-row (B,) vector, and last_logits is taken at
+    each row's own last real position. One executable then serves every
+    prompt length in the bucket.
     """
     B, T = tokens.shape
     logits, _, (scan_caches, rem_caches) = forward(
         params, tokens, cfg, ctx=ctx, frontend=frontend, moe_impl=moe_impl,
-        collect_cache=True, remat="none", cache_kind=cache_kind)
+        collect_cache=True, remat="none", cache_kind=cache_kind,
+        lengths=lengths, filter_len=max_len)
     if frontend is not None and not cfg.enc_dec:
         T = T + frontend.shape[1]              # VLM: patches occupy kv positions
-
-    def to_ring(leaf, seq_axis: int, eff: int):
-        """Reorder the last min(T,eff) positions into ring-slot order."""
-        Tc = leaf.shape[seq_axis]
-        if Tc <= eff:
-            pad = [(0, 0)] * leaf.ndim
-            pad[seq_axis] = (0, eff - Tc)
-            ring = jnp.pad(leaf, pad)
-            slot_pos = jnp.where(jnp.arange(eff) < Tc, jnp.arange(eff), -1)
-        else:
-            base = Tc - eff
-            j = jnp.arange(eff)
-            p = base + ((j - base) % eff)
-            ring = jnp.take(leaf, p, axis=seq_axis)
-            slot_pos = p
-        return ring, slot_pos.astype(jnp.int32)
+    lens = (jnp.full((B,), T, jnp.int32) if lengths is None
+            else jnp.asarray(lengths, jnp.int32))
 
     def fix_cache(c, kind: str, seq_axis: int):
         eff = max_len
@@ -505,11 +544,12 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
         for k, v in c.items():
             if k in ("k", "v"):
                 if eff < max_len:
-                    ring, sp = to_ring(v.astype(jnp.bfloat16), seq_axis, eff)
+                    ring, sp = _ring_from_linear(v.astype(jnp.bfloat16),
+                                                 seq_axis, eff, lens)
                     out[k] = ring
                     # slot_pos is per batch row: (B, eff) / (n_groups, B, eff)
-                    sp = jnp.broadcast_to(sp, v.shape[:seq_axis - 1] + (B, eff))
-                    out["slot_pos"] = sp
+                    out["slot_pos"] = jnp.broadcast_to(
+                        sp, v.shape[:seq_axis - 1] + (B, eff))
                 else:
                     pad = [(0, 0)] * v.ndim
                     pad[seq_axis] = (0, max_len - v.shape[seq_axis])
@@ -526,14 +566,18 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
 
     groups = {lk: fix_cache(lv, cfg.pattern[int(lk[1:])], seq_axis=2)
               for lk, lv in scan_caches.items()}
-    cache = {"groups": groups, "pos": jnp.asarray(T, jnp.int32)}
+    pos = jnp.asarray(T, jnp.int32) if lengths is None else lens
+    cache = {"groups": groups, "pos": pos}
     n_groups, n_rem = layer_layout(cfg)
     if n_rem:
         cache["rem"] = [
             fix_cache(rc, cfg.blocks[n_groups * len(cfg.pattern) + i], seq_axis=1)
             for i, rc in enumerate(rem_caches)
         ]
-    return cache, logits[:, -1, :]
+    if lengths is None:
+        return cache, logits[:, -1, :]
+    last = jnp.take_along_axis(logits, (lens - 1)[:, None, None], axis=1)
+    return cache, last[:, 0, :]
 
 
 def materialize_conv_filters(params, cfg: ModelConfig, max_len: int):
@@ -557,6 +601,242 @@ def materialize_conv_filters(params, cfg: ModelConfig, max_len: int):
                 params["rem"][i]["mix"]["filter"], max_len, hcfg)
     if rem:
         out["rem"] = rem
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Chunked (resumable) prefill: consume a prompt in fixed-size chunks
+#
+# One chunk-shaped executable covers arbitrarily long prompts, so a serving
+# engine can interleave long-prompt admission with decode ticks (FutureFill /
+# Flash-Inference-style blocked prompt processing). The scratch cache differs
+# from the decode cache in two ways: Hyena layers carry the k.v product
+# history so cross-chunk contributions use the TRUE long filter (exact — not
+# the distilled approximation; the modal state is advanced alongside), and
+# windowed attention keeps a full linear buffer (ring layout is produced at
+# finalize). Buffers are rounded up to a whole number of chunks so the final
+# (padded) chunk's writes never clamp.
+# ---------------------------------------------------------------------------
+def _prefill_buf_len(max_len: int, chunk: int) -> int:
+    return ((max_len + chunk - 1) // chunk) * chunk
+
+
+def _init_block_prefill_cache(kind: str, cfg: ModelConfig, batch: int,
+                              buf_len: int, cache_kind: str):
+    c: Dict[str, Any] = {}
+    if kind in (ATTN, LOCAL_ATTN):
+        # f32 scratch: the decode cache is bf16, but chunked prefill re-reads
+        # past keys for in-chunk attention — downcast only at finalize
+        c["k"] = Param(jnp.zeros((batch, buf_len, cfg.n_kv_heads, cfg.hd),
+                                 jnp.float32),
+                       ("batch", "kv_seq", "kv_heads", None))
+        c["v"] = Param(jnp.zeros((batch, buf_len, cfg.n_kv_heads, cfg.hd),
+                                 jnp.float32),
+                       ("batch", "kv_seq", "kv_heads", None))
+    elif kind == HYENA:
+        hc = hyena_mod.init_hyena_conv_cache(batch, buf_len, cfg)
+        c["conv"] = Param(hc["conv"], ("batch", None, "qkv"))
+        c["kv"] = Param(hc["kv"], ("batch", "kv_seq", "qkv"))
+        if cache_kind != "conv":
+            nc = hyena_mod.init_hyena_cache(batch, cfg)
+            c["x_re"] = Param(nc["x_re"], ("batch", "qkv", "state"))
+            c["x_im"] = Param(nc["x_im"], ("batch", "qkv", "state"))
+    elif kind == MAMBA2:
+        mc = ssm_mod.init_mamba2_cache(batch, cfg)
+        c["conv"] = Param(mc["conv"], ("batch", None, "mlp"))
+        c["ssm"] = Param(mc["ssm"], ("batch", "heads", None, "state"))
+    elif kind == RGLRU:
+        rc = ssm_mod.init_rglru_cache(batch, cfg)
+        c["conv"] = Param(rc["conv"], ("batch", None, "mlp"))
+        c["h"] = Param(rc["h"], ("batch", "mlp"))
+    else:
+        raise ValueError(kind)
+    return c
+
+
+def init_prefill_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                       chunk: int, cache_kind: str = "native"):
+    """Param-tree of chunked-prefill scratch state (see section comment)."""
+    if cfg.enc_dec or cfg.frontend != "none":
+        raise ValueError("chunked prefill does not support enc-dec/frontend "
+                         "architectures")
+    buf_len = _prefill_buf_len(max_len, chunk)
+    n_groups, n_rem = layer_layout(cfg)
+    group = {f"l{i}": _init_block_prefill_cache(kind, cfg, batch, buf_len,
+                                                cache_kind)
+             for i, kind in enumerate(cfg.pattern)}
+    stacked = jax.tree.map(
+        lambda p: Param(jnp.broadcast_to(p.value, (n_groups,) + p.value.shape),
+                        (None,) + tuple(p.axes)),
+        group, is_leaf=is_param)
+    cache: Dict[str, Any] = {"groups": stacked}
+    if n_rem:
+        cache["rem"] = [
+            _init_block_prefill_cache(
+                cfg.blocks[n_groups * len(cfg.pattern) + i], cfg, batch,
+                buf_len, cache_kind)
+            for i in range(n_rem)
+        ]
+    return cache
+
+
+def _prefill_chunk_block(bp, bc, kind: str, x, positions, start, chunk_len,
+                         cfg: ModelConfig, max_len: int, ctx: ShardCtx, *,
+                         conv_filters=None, cache_kind: str = "native"):
+    """One block over one prompt chunk. Mirrors _decode_block's structure."""
+    h = apply_norm(bp["norm1"], x, cfg.norm)
+    window = cfg.window if kind == LOCAL_ATTN else 0
+    if kind in (ATTN, LOCAL_ATTN):
+        sub = {k: bc[k] for k in ("k", "v")}
+        sub, y = attn_mod.attention_prefill_chunk(
+            bp["mix"], sub, h, positions, start, chunk_len, cfg,
+            window=window, ctx=ctx)
+    elif kind == HYENA:
+        keys = ("conv", "kv") if "x_re" not in bc else ("conv", "kv", "x_re",
+                                                        "x_im")
+        sub = {k: bc[k] for k in keys}
+        if conv_filters is None:       # fallback: re-materialize every chunk
+            # at max_len, NOT the buffer length — the implicit filter's
+            # values depend on the materialization length, and every other
+            # serving path pins it to max_len (filter_len)
+            conv_filters = hyena_mod.materialize_filters(
+                bp["mix"]["filter"], max_len, cfg.hyena)
+        sub, y = hyena_mod.hyena_prefill_chunk(
+            bp["mix"], sub, h, start, chunk_len, cfg, conv_filters, ctx=ctx,
+            cache_kind="conv" if "x_re" not in bc else "native")
+    elif kind == MAMBA2:
+        sub = {k: bc[k] for k in ("conv", "ssm")}
+        sub, y = ssm_mod.mamba2_prefill_chunk(bp["mix"], sub, h, chunk_len,
+                                              cfg, ctx=ctx)
+    elif kind == RGLRU:
+        sub = {k: bc[k] for k in ("conv", "h")}
+        sub, y = ssm_mod.rglru_prefill_chunk(bp["mix"], sub, h, chunk_len,
+                                             cfg, ctx=ctx)
+    else:
+        raise ValueError(kind)
+    bc = dict(bc, **sub)
+    x = x + y
+    if cfg.d_ff > 0:
+        h = apply_norm(bp["norm2"], x, cfg.norm)
+        if cfg.mlp_kind == MLP_MOE:
+            y, _ = moe_mod.moe_block(bp["mlp"], h, cfg.moe, ctx=ctx)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg.act, ctx=ctx)
+        x = x + y
+    return bc, x
+
+
+def prefill_from_cache(params, cache, tokens, start_pos, cfg: ModelConfig,
+                       max_len: int, *, chunk_len=None, ctx: ShardCtx = NOCTX,
+                       conv_filters=None, cache_kind: str = "native"):
+    """Resumable prefill: consume the prompt slice tokens (B, C) occupying
+    absolute positions [start_pos, start_pos + chunk_len).
+
+    `cache` comes from `init_prefill_cache` (first chunk) or a previous call;
+    `chunk_len` (traced scalar, default C) marks the real positions of a
+    padded final chunk — one chunk-shaped executable serves every prompt
+    length. `conv_filters` (materialize_conv_filters at the buffer length or
+    longer) avoids re-running the Hyena filter MLP per chunk. Returns
+    (cache, last_logits (B, V)) with logits taken at the chunk's last real
+    position; hand the finished cache to `finalize_prefill_cache`.
+    """
+    B, C = tokens.shape
+    if chunk_len is None:
+        chunk_len = C
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    start = jnp.asarray(start_pos, jnp.int32)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = embed_tokens(params["embed"], tokens, ctx=ctx, dtype=dtype)
+    if cfg.rope_theta <= 0.0:                    # learned absolute positions
+        pe = params["embed"]["pos"]
+        x = x + jax.lax.dynamic_slice_in_dim(pe, start, C,
+                                             axis=0)[None].astype(dtype)
+    positions = jnp.broadcast_to(start + jnp.arange(C)[None, :], (B, C))
+    n_groups, n_rem = layer_layout(cfg)
+
+    def body(x, gp_gc):
+        gp, gc = gp_gc[0], gp_gc[1]
+        gf = gp_gc[2] if len(gp_gc) > 2 else {}
+        for i, kind in enumerate(cfg.pattern):
+            gc[f"l{i}"], x = _prefill_chunk_block(
+                gp[f"l{i}"], gc[f"l{i}"], kind, x, positions, start,
+                chunk_len, cfg, max_len, ctx, conv_filters=gf.get(f"l{i}"),
+                cache_kind=cache_kind)
+        return x, gc
+
+    from repro import flags
+    n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+    xs = (params["groups"], cache["groups"])
+    if conv_filters is not None:
+        xs = xs + (conv_filters["groups"],)
+    x, new_group_caches = jax.lax.scan(body, x, xs,
+                                       unroll=flags.scan_unroll(n_g))
+    new_cache = {"groups": new_group_caches}
+    if n_rem:
+        rem_filters = (conv_filters or {}).get("rem", {})
+        rem = []
+        for i in range(n_rem):
+            kind = cfg.blocks[n_groups * len(cfg.pattern) + i]
+            bc, x = _prefill_chunk_block(
+                params["rem"][i], cache["rem"][i], kind, x, positions, start,
+                chunk_len, cfg, max_len, ctx, conv_filters=rem_filters.get(i),
+                cache_kind=cache_kind)
+            rem.append(bc)
+        new_cache["rem"] = rem
+    x = jax.lax.dynamic_slice_in_dim(x, chunk_len - 1, 1, axis=1)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings,
+                     softcap=cfg.logit_softcap, ctx=ctx)
+    return new_cache, logits[:, 0, :]
+
+
+def finalize_prefill_cache(cache, length, cfg: ModelConfig, max_len: int, *,
+                           cache_kind: str = "native"):
+    """Convert finished chunked-prefill scratch into a decode cache: drop the
+    Hyena k.v history for the distilled kind, trim buffers to max_len,
+    downcast attention k/v to bf16, re-layout windowed attention into ring
+    form, and set pos = `length` (the prompt length, traced scalar)."""
+    length = jnp.asarray(length, jnp.int32)
+
+    def trim(v, seq_axis: int, to_len: int):
+        return jax.lax.slice_in_dim(v, 0, to_len, axis=seq_axis)
+
+    def fix(c, kind: str, seq_axis: int):
+        B = jax.tree.leaves(c)[0].shape[seq_axis - 1]
+        lens = jnp.full((B,), length, jnp.int32)
+        out = dict(c)
+        if kind in (ATTN, LOCAL_ATTN):
+            eff = max_len
+            if kind == LOCAL_ATTN and 0 < cfg.window < max_len:
+                eff = cfg.window
+            if eff < max_len:
+                ring_k, sp = _ring_from_linear(c["k"].astype(jnp.bfloat16),
+                                               seq_axis, eff, lens)
+                ring_v, _ = _ring_from_linear(c["v"].astype(jnp.bfloat16),
+                                              seq_axis, eff, lens)
+                out = {"k": ring_k, "v": ring_v,
+                       "slot_pos": jnp.broadcast_to(
+                           sp, c["k"].shape[:seq_axis - 1] + (B, eff))}
+            else:
+                out = {"k": trim(c["k"], seq_axis, max_len).astype(jnp.bfloat16),
+                       "v": trim(c["v"], seq_axis, max_len).astype(jnp.bfloat16)}
+        elif kind == HYENA:
+            if "x_re" in c:                       # distilled: drop kv history
+                out = {"conv": c["conv"], "x_re": c["x_re"], "x_im": c["x_im"]}
+            else:
+                out = {"conv": c["conv"],
+                       "kv": trim(c["kv"], seq_axis, max_len)}
+        return out
+
+    groups = {lk: fix(lv, cfg.pattern[int(lk[1:])], seq_axis=2)
+              for lk, lv in cache["groups"].items()}
+    n_groups, n_rem = layer_layout(cfg)
+    out = {"groups": groups, "pos": length}
+    if n_rem:
+        out["rem"] = [
+            fix(rc, cfg.blocks[n_groups * len(cfg.pattern) + i], seq_axis=1)
+            for i, rc in enumerate(cache["rem"])
+        ]
     return out
 
 
@@ -588,6 +868,31 @@ def write_cache_slot(pool, single, slot):
     if "rem" in pool:
         out["rem"] = jax.tree.map(_slot_update(0, slot), pool["rem"],
                                   single["rem"])
+    return out
+
+
+def write_cache_slots(pool, multi, slots):
+    """Scatter a batch=K prefilled cache (from `prefill(..., lengths=...)`)
+    into rows `slots` (K,) of a pooled per-slot cache in ONE call — the
+    bucketed batch-admission path. Slot indices >= n_slots are dropped
+    (mode="drop"), which is how the engine pads an admission batch to a fixed
+    size: dummy rows point at slot index n_slots. jit-friendly (traced
+    `slots`); `multi["pos"]` must be a (K,) vector."""
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def upd(axis: int):
+        def f(pool_leaf, multi_leaf):
+            vals = multi_leaf.astype(pool_leaf.dtype)
+            if axis == 0:
+                return pool_leaf.at[slots].set(vals, mode="drop")
+            return pool_leaf.at[:, slots].set(vals, mode="drop")
+        return f
+
+    out = {"groups": jax.tree.map(upd(1), pool["groups"], multi["groups"]),
+           "pos": pool["pos"].at[slots].set(
+               jnp.asarray(multi["pos"], jnp.int32), mode="drop")}
+    if "rem" in pool:
+        out["rem"] = jax.tree.map(upd(0), pool["rem"], multi["rem"])
     return out
 
 

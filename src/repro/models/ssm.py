@@ -13,8 +13,8 @@ import numpy as np
 
 from repro.distributed.sharding import Param
 from repro.models.layers import (
-    NOCTX, ShardCtx, apply_short_conv, dense_init, init_short_conv,
-    short_conv_step,
+    NOCTX, ShardCtx, apply_short_conv, conv_tail_gather, dense_init,
+    init_short_conv, short_conv_chunk, short_conv_step,
 )
 
 
@@ -61,11 +61,13 @@ def _segsum(a):
     return jnp.where(mask, seg, -jnp.inf)
 
 
-def ssd_chunked(x, a_log, B, C, chunk: int):
+def ssd_chunked(x, a_log, B, C, chunk: int, initial_state=None):
     """Chunked SSD (Mamba-2 Listing 1, JAX port).
 
     x: (b, L, H, P) pre-scaled by dt; a_log: (b, L, H) = dt*A (negative);
     B, C: (b, L, G, N). Returns y (b, L, H, P) and final state (b, H, P, N).
+    `initial_state` (b, H, P, N) resumes from a previous segment (chunked
+    prefill); omitted, the recurrence starts from zero as before.
     """
     b, L, H, P = x.shape
     G, N = B.shape[2], B.shape[3]
@@ -97,7 +99,8 @@ def ssd_chunked(x, a_log, B, C, chunk: int):
         return new, carry                                        # emit state BEFORE chunk
 
     from repro import flags
-    init = jnp.zeros((b, H, P, N), x.dtype)
+    init = (jnp.zeros((b, H, P, N), x.dtype) if initial_state is None
+            else initial_state.astype(x.dtype))
     final, prev_states = jax.lax.scan(
         scan_fn, init,
         (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(2, 0, 1)),
@@ -111,8 +114,14 @@ def ssd_chunked(x, a_log, B, C, chunk: int):
     return y, final
 
 
-def mamba2_block(params, x, cfg, *, ctx: ShardCtx = NOCTX, return_state=False):
-    """Full-sequence Mamba-2 block. x: (B, S, D)."""
+def mamba2_block(params, x, cfg, *, ctx: ShardCtx = NOCTX, return_state=False,
+                 lengths=None):
+    """Full-sequence Mamba-2 block. x: (B, S, D).
+
+    `lengths` (B,) marks true prompt lengths for bucketed prefill: padded
+    positions get dt = 0, i.e. an identity transition (decay 1, input 0), so
+    the final state is exactly the state at each row's true length.
+    """
     Bsz, S, D = x.shape
     s = cfg.ssm
     proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
@@ -123,6 +132,9 @@ def mamba2_block(params, x, cfg, *, ctx: ShardCtx = NOCTX, return_state=False):
     B_ = B_.reshape(Bsz, S, G, N)
     C_ = C_.reshape(Bsz, S, G, N)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    if lengths is not None:
+        dt = jnp.where(jnp.arange(S)[None, :, None] < lengths[:, None, None],
+                       dt, 0.0)
     A = -jnp.exp(params["A_log"])                                      # (H,)
     xh = xs.reshape(Bsz, S, H, s.head_dim).astype(jnp.float32)
     y, state = ssd_chunked(xh * dt[..., None], dt * A, B_.astype(jnp.float32),
@@ -137,7 +149,7 @@ def mamba2_block(params, x, cfg, *, ctx: ShardCtx = NOCTX, return_state=False):
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
     if return_state:
         w = s.d_conv - 1
-        cache = {"conv": pre_conv[:, S - w:, :].astype(jnp.float32),
+        cache = {"conv": conv_tail_gather(pre_conv, w, lengths).astype(jnp.float32),
                  "ssm": state.astype(jnp.float32)}
         return out, cache
     return out
@@ -184,6 +196,38 @@ def mamba2_decode(params, cache, x, cfg, *, ctx: ShardCtx = NOCTX):
     return {"conv": conv_cache, "ssm": h}, out[:, None, :]
 
 
+def mamba2_prefill_chunk(params, cache, x, chunk_len, cfg, *,
+                         ctx: ShardCtx = NOCTX):
+    """Consume one prompt chunk x (B, C, D) resuming from cache{conv, ssm}.
+    Positions >= chunk_len are padding (identity transitions)."""
+    Bsz, C, D = x.shape
+    s = cfg.ssm
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xBC, dt, di, H, G, N = _split_mamba_proj(proj, cfg)
+    new_tail, xBC = short_conv_chunk(params["conv"], cache["conv"], xBC,
+                                     chunk_len)
+    xBC = jax.nn.silu(xBC)
+    xs, B_, C_ = jnp.split(xBC, [di, di + G * N], axis=-1)
+    B_ = B_.reshape(Bsz, C, G, N)
+    C_ = C_.reshape(Bsz, C, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    dt = jnp.where(jnp.arange(C)[None, :, None] < chunk_len, dt, 0.0)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(Bsz, C, H, s.head_dim).astype(jnp.float32)
+    y, state = ssd_chunked(xh * dt[..., None], dt * A, B_.astype(jnp.float32),
+                           C_.astype(jnp.float32), s.chunk,
+                           initial_state=cache["ssm"])
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(Bsz, C, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) *
+         params["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    return {"conv": new_tail.astype(jnp.float32),
+            "ssm": state.astype(jnp.float32)}, out
+
+
 # ===========================================================================
 # RG-LRU (RecurrentGemma / Griffin)
 # ===========================================================================
@@ -217,25 +261,36 @@ def _rglru_gates(params, xc):
     return log_a, gated
 
 
-def rglru_block(params, x, cfg, *, ctx: ShardCtx = NOCTX, return_state=False):
-    """Full-sequence RG-LRU block via associative scan. x: (B,S,D)."""
+def _rglru_combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def rglru_block(params, x, cfg, *, ctx: ShardCtx = NOCTX, return_state=False,
+                lengths=None):
+    """Full-sequence RG-LRU block via associative scan. x: (B,S,D).
+
+    With `lengths` (B,), padded positions become identity transitions
+    (a = 1, input 0) so the final state is the state at the true length.
+    """
     xb = jnp.einsum("bsd,de->bse", x, params["wx"].astype(x.dtype))
     yb = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["wy"].astype(x.dtype)))
     xc = apply_short_conv(params["conv"], xb)
     log_a, gated = _rglru_gates(params, xc)
+    if lengths is not None:
+        valid = (jnp.arange(x.shape[1])[None, :, None] <
+                 lengths[:, None, None])
+        log_a = jnp.where(valid, log_a, 0.0)
+        gated = jnp.where(valid, gated, 0.0)
     a = jnp.exp(log_a)
 
-    def combine(c1, c2):
-        a1, b1 = c1
-        a2, b2 = c2
-        return a1 * a2, a2 * b1 + b2
-
-    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    _, h = jax.lax.associative_scan(_rglru_combine, (a, gated), axis=1)
     out = h.astype(x.dtype) * yb
     out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
     if return_state:
         w = cfg.rglru.d_conv - 1
-        cache = {"conv": xb[:, xb.shape[1] - w:, :].astype(jnp.float32),
+        cache = {"conv": conv_tail_gather(xb, w, lengths).astype(jnp.float32),
                  "h": h[:, -1, :].astype(jnp.float32)}
         return out, cache
     return out
@@ -259,3 +314,25 @@ def rglru_decode(params, cache, x, cfg, *, ctx: ShardCtx = NOCTX):
     out = h.astype(x.dtype) * yb
     out = jnp.einsum("be,ed->bd", out, params["wo"].astype(x.dtype))
     return {"conv": conv_cache, "h": h}, out[:, None, :]
+
+
+def rglru_prefill_chunk(params, cache, x, chunk_len, cfg, *,
+                        ctx: ShardCtx = NOCTX):
+    """Consume one prompt chunk x (B, C, D) resuming from cache{conv, h}.
+    Positions >= chunk_len are padding (identity transitions)."""
+    C = x.shape[1]
+    xb = jnp.einsum("bsd,de->bse", x, params["wx"].astype(x.dtype))
+    yb = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["wy"].astype(x.dtype)))
+    new_tail, xc = short_conv_chunk(params["conv"], cache["conv"], xb,
+                                    chunk_len)
+    log_a, gated = _rglru_gates(params, xc)
+    valid = (jnp.arange(C) < chunk_len)[None, :, None]
+    log_a = jnp.where(valid, log_a, 0.0)
+    gated = jnp.where(valid, gated, 0.0)
+    a = jnp.exp(log_a)
+    a_cum, h = jax.lax.associative_scan(_rglru_combine, (a, gated), axis=1)
+    h = h + a_cum * cache["h"][:, None, :]          # fold in the carried state
+    out = h.astype(x.dtype) * yb
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    return {"conv": new_tail.astype(jnp.float32),
+            "h": h[:, -1, :].astype(jnp.float32)}, out

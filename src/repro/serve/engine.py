@@ -23,8 +23,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import NOCTX, ShardCtx
-from repro.models.model import (decode_step, materialize_conv_filters,
-                                prefill)
+from repro.models.model import (decode_step, finalize_prefill_cache,
+                                materialize_conv_filters, prefill,
+                                prefill_from_cache)
 from repro.serve.sampling import sample_token
 
 # Shared jit memo: engines are cheap throwaway objects (tests/benchmarks
@@ -50,6 +51,32 @@ def jitted_prefill(cfg: ModelConfig, max_len: int, cache_kind: str = "native",
         _JIT_CACHE[key] = jax.jit(
             functools.partial(prefill, cfg=cfg, max_len=max_len, ctx=ctx,
                               cache_kind=cache_kind))
+    return _JIT_CACHE[key]
+
+
+def jitted_prefill_chunk(cfg: ModelConfig, max_len: int,
+                         cache_kind: str = "native", ctx: ShardCtx = NOCTX):
+    """Resumable chunk step (prefill_from_cache): one executable per chunk
+    shape, shared across engines. Call (params, pcache, tokens, start_pos,
+    chunk_len=..., conv_filters=...); the scratch cache is donated."""
+    key = ("prefill_chunk", cfg, max_len, cache_kind, id(ctx))
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(prefill_from_cache, cfg=cfg, max_len=max_len,
+                              ctx=ctx, cache_kind=cache_kind),
+            donate_argnums=(1,))
+    return _JIT_CACHE[key]
+
+
+def jitted_finalize_prefill(cfg: ModelConfig, max_len: int,
+                            cache_kind: str = "native"):
+    # no donation: the f32 scratch buffers cannot back the trimmed/bf16
+    # decode-cache outputs, so donating them only produces warnings
+    key = ("finalize_prefill", cfg, max_len, cache_kind)
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(finalize_prefill_cache, cfg=cfg,
+                              max_len=max_len, cache_kind=cache_kind))
     return _JIT_CACHE[key]
 
 

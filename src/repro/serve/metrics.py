@@ -1,0 +1,69 @@
+"""Serving telemetry: XLA compile-count tracking.
+
+The bucketed-prefill claim — O(#buckets) prefill executables instead of
+O(#distinct prompt lengths) — is asserted, not eyeballed: a process-wide
+listener on jax.monitoring's backend-compile event counts every XLA
+compilation, and per-callable executable counts come from the jit cache
+(`_cache_size`). jax.monitoring has no unregister, so the listener is
+installed once and counts monotonically; use `count_compiles()` scopes for
+deltas.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class _CompileCounter:
+    def __init__(self) -> None:
+        self._n = 0
+        self._installed = False
+
+    def install(self) -> "_CompileCounter":
+        if not self._installed:
+            jax.monitoring.register_event_duration_secs_listener(self._on_event)
+            self._installed = True
+        return self
+
+    def _on_event(self, name: str, duration: float, **kwargs) -> None:
+        if name == _COMPILE_EVENT:
+            self._n += 1
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+
+compile_counter = _CompileCounter()
+
+
+class CompileScope:
+    """Result object of `count_compiles()`: `.compiles` is the number of XLA
+    backend compilations that happened inside the scope."""
+
+    def __init__(self) -> None:
+        self.compiles: Optional[int] = None
+
+
+@contextlib.contextmanager
+def count_compiles():
+    c = compile_counter.install()
+    scope = CompileScope()
+    start = c.count
+    try:
+        yield scope
+    finally:
+        scope.compiles = c.count - start
+
+
+def jit_cache_size(fn) -> Optional[int]:
+    """Number of compiled executables held by a jax.jit-wrapped callable
+    (one per distinct input signature). None if the API is unavailable."""
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return None

@@ -7,27 +7,43 @@ state is a fixed-size row of a pooled cache (modal SSM state, conv tail, or
 kv/conv buffers for the baseline modes). This module schedules requests onto
 those rows:
 
-  * admission   — a queued request is prefilled (batch=1 forward) and its
-                  cache scattered into a free slot (`write_cache_slot`);
+  * admission   — queued requests are prefilled and their caches scattered
+                  into free slots. Prompts are right-padded to power-of-two
+                  length BUCKETS and prefilled together as ONE fixed-batch
+                  call (per-row `lengths` masking keeps padded positions out
+                  of every cache), so the engine compiles O(#buckets) prefill
+                  executables instead of O(#distinct lengths) and admission
+                  cost amortizes across a burst of arrivals;
+  * chunking    — prompts longer than `prefill_chunk` run through the
+                  resumable `prefill_from_cache` path: one chunk-sized
+                  executable covers any prompt length, and only one chunk is
+                  consumed per tick, so a long prompt never stalls resident
+                  decodes for more than one chunk;
   * decode      — ONE jitted `decode_step` over the full slot pool per tick,
                   each slot at its own position (per-slot `pos` vector);
                   inactive slots decode garbage that is ignored and fully
                   overwritten on readmission;
-  * sampling    — per-slot temperature/top-k/top-p in one batched
-                  `sample_token_slots` call;
+  * overlap     — the host loop exploits JAX async dispatch: tick N is
+                  enqueued from device-resident last-token state BEFORE tick
+                  N-1's sampled tokens are fetched to host, so EOS/eviction
+                  bookkeeping and admissions run while the device crunches
+                  the next step (`overlap=False` restores the fully
+                  synchronous admit-then-decode tick);
+  * sampling    — per-slot temperature/top-k/top-p in one batched jitted
+                  `sample_token_slots` call, parameter vectors resident on
+                  device and updated by a scatter at admission;
   * eviction    — on EOS or max-new-tokens the slot is freed (and optionally
-                  zeroed) and the next queued request admitted;
-  * interleave  — at most `max_prefills_per_step` admissions happen per tick,
-                  so resident requests keep decoding while a burst of
-                  arrivals prefills.
+                  zeroed) and the next queued request admitted.
 
 Deployment modes (paper Sec. 2.2 / 5.4): "distilled" (LaughingHyena modal
 recurrence), "cached_conv" (Lemma 2.1 O(t) baseline), and the native mode of
 non-LCSM archs (attention KV cache, Mamba2/RG-LRU state).
 
-Prompt lengths are prefilled at their exact length, so each distinct length
-compiles one prefill executable (bucket prompt lengths upstream if that
-matters); the pooled decode step compiles exactly once.
+Guarantee (tested): greedy outputs are token-for-token identical to
+sequential single-request generation with bucketing, chunking, and the
+overlapped loop all enabled. With temperature > 0 the per-request token
+*distributions* are unchanged but the PRNG consumption order differs between
+overlapped and synchronous runs.
 """
 from __future__ import annotations
 
@@ -35,7 +51,8 @@ import dataclasses
 import math
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -44,25 +61,30 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import unzip
 from repro.models.layers import NOCTX, ShardCtx
-from repro.models.model import (init_cache, materialize_conv_filters,
-                                reset_cache_slot, write_cache_slot)
-from repro.serve.sampling import sample_token, sample_token_slots
+from repro.models.model import (init_cache, init_prefill_cache,
+                                materialize_conv_filters, reset_cache_slot,
+                                write_cache_slot, write_cache_slots)
+from repro.serve.sampling import sample_token_slots
 
-QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+QUEUED, PREFILLING, RUNNING, FINISHED = ("queued", "prefilling", "running",
+                                         "finished")
 
 _SLOT_JITS: Dict[str, Callable] = {}
 
 
-def _jitted_write_slot():
-    if "write" not in _SLOT_JITS:
-        _SLOT_JITS["write"] = jax.jit(write_cache_slot, donate_argnums=(0,))
-    return _SLOT_JITS["write"]
+def _jitted(name: str, fn, **jit_kw):
+    if name not in _SLOT_JITS:
+        _SLOT_JITS[name] = jax.jit(fn, **jit_kw)
+    return _SLOT_JITS[name]
 
 
-def _jitted_reset_slot():
-    if "reset" not in _SLOT_JITS:
-        _SLOT_JITS["reset"] = jax.jit(reset_cache_slot, donate_argnums=(0,))
-    return _SLOT_JITS["reset"]
+def _update_slot_meta(temps, top_ks, top_ps, last, slots, t, k, p, tok):
+    """Scatter per-slot sampling params + last token for newly admitted
+    requests. Out-of-range slot indices (dummy admission rows) are dropped."""
+    md = "drop"
+    return (temps.at[slots].set(t, mode=md), top_ks.at[slots].set(k, mode=md),
+            top_ps.at[slots].set(p, mode=md),
+            last.at[slots].set(tok, mode=md))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,17 +133,38 @@ class ContinuousBatchingEngine:
     `mode`: "distilled" | "cached_conv" (LCSM archs) — non-LCSM archs serve
     their native cache in either setting. `reset_on_evict` zeroes a slot on
     eviction (hygiene / debugging; admission overwrites the slot anyway).
+
+    Fast-path knobs:
+      * bucket_prompts — pad prompts to power-of-two buckets (>= min_bucket)
+        and prefill up to `max_prefills_per_step` same-bucket requests as one
+        fixed-batch call: O(#buckets) prefill executables.
+      * prefill_chunk  — prompts longer than this go through resumable
+        chunked prefill, one chunk per tick (None disables).
+      * overlap        — async host loop: enqueue the next pooled decode
+        before fetching the previous tick's tokens.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
                  max_len: int = 4096, mode: str = "distilled",
                  ctx: ShardCtx = NOCTX, seed: int = 0,
                  max_prefills_per_step: int = 1, reset_on_evict: bool = False,
+                 bucket_prompts: bool = True, min_bucket: int = 8,
+                 prefill_chunk: Optional[int] = None, overlap: bool = True,
                  clock: Callable[[], float] = time.monotonic):
         if mode not in ("distilled", "cached_conv"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "cached_conv" and cfg.hyena is None:
             raise ValueError("cached_conv mode requires a Hyena (LCSM) arch")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}"
+                             " (None disables chunked prefill)")
+        if (prefill_chunk is not None and cfg.ssm is not None
+                and prefill_chunk > cfg.ssm.chunk
+                and prefill_chunk % cfg.ssm.chunk != 0):
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} must divide into the SSD "
+                f"chunk length (cfg.ssm.chunk={cfg.ssm.chunk}): use a "
+                f"multiple of it, or a value <= it")
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -130,31 +173,62 @@ class ContinuousBatchingEngine:
         self.ctx = ctx
         self.max_prefills_per_step = max_prefills_per_step
         self.reset_on_evict = reset_on_evict
+        self._bucketed = bucket_prompts
+        self._min_bucket = min_bucket
+        self._chunk = prefill_chunk
+        self._overlap = overlap
+        self._prefill_batch = max(1, max_prefills_per_step)
         self._clock = clock
         self._key = jax.random.PRNGKey(seed)
         cache_kind = "conv" if mode == "cached_conv" else "native"
+        self._cache_kind = cache_kind
         self.cache, _ = unzip(init_cache(cfg, n_slots, max_len,
                                          cache_kind=cache_kind, per_slot=True))
-        from repro.serve.engine import jitted_decode_step, jitted_prefill
+        from repro.serve.engine import (jitted_decode_step,
+                                        jitted_finalize_prefill,
+                                        jitted_prefill, jitted_prefill_chunk)
         self._decode = jitted_decode_step(cfg, ctx)
         self._prefill = jitted_prefill(cfg, max_len, cache_kind, ctx)
-        self._write_slot = _jitted_write_slot()
-        self._reset_slot = _jitted_reset_slot()
-        # cached-conv mode: materialize the long filters once, not per token
+        self._write_slot = _jitted("write", write_cache_slot,
+                                   donate_argnums=(0,))
+        self._write_slots = _jitted("write_many", write_cache_slots,
+                                    donate_argnums=(0,))
+        self._reset_slot = _jitted("reset", reset_cache_slot,
+                                   donate_argnums=(0,))
+        self._sample = _jitted("sample", sample_token_slots)
+        self._meta = _jitted("slot_meta", _update_slot_meta)
+        # long filters: cached-conv decode always needs them; chunked prefill
+        # needs them for any Hyena layer in either mode
+        need_filters = cfg.hyena is not None and (cache_kind == "conv"
+                                                  or prefill_chunk)
         self._conv_filters = (materialize_conv_filters(params, cfg, max_len)
                               if cache_kind == "conv" else None)
-        # per-slot host-side state
+        self._chunk_filters = (self._conv_filters if cache_kind == "conv"
+                               else (materialize_conv_filters(params, cfg,
+                                                              max_len)
+                                     if need_filters else None))
+        self._prefill_chunk = (jitted_prefill_chunk(cfg, max_len, cache_kind,
+                                                    ctx)
+                               if prefill_chunk else None)
+        self._finalize = (jitted_finalize_prefill(cfg, max_len, cache_kind)
+                          if prefill_chunk else None)
+        # per-slot host-side bookkeeping; sampling params + last token live
+        # on device so the overlapped loop never waits on a host upload
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.active = np.zeros(n_slots, bool)
-        self.last_token = np.zeros(n_slots, np.int32)
-        self.temps = np.zeros(n_slots, np.float32)
-        self.top_ks = np.zeros(n_slots, np.int32)
-        self.top_ps = np.ones(n_slots, np.float32)
+        self._temps = jnp.zeros((n_slots,), jnp.float32)
+        self._top_ks = jnp.zeros((n_slots,), jnp.int32)
+        self._top_ps = jnp.ones((n_slots,), jnp.float32)
+        self._last = jnp.zeros((n_slots,), jnp.int32)
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
+        self._pending: Optional[Tuple[list, jnp.ndarray]] = None
+        self._chunk_state: Optional[Dict[str, Any]] = None
+        self._buckets_used: set = set()
         self._next_rid = 0
         self.stats: Dict[str, int] = {"admitted": 0, "evicted": 0,
-                                      "decode_steps": 0, "prefills": 0}
+                                      "decode_steps": 0, "prefills": 0,
+                                      "prefill_calls": 0, "chunk_steps": 0}
 
     # ------------------------------------------------------------------
     # request intake
@@ -173,8 +247,13 @@ class ContinuousBatchingEngine:
     def submit_request(self, req: Request) -> Request:
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        w = (self.cfg.hyena.short_conv - 1) if self.cfg.hyena else 1
-        if req.prompt_len < max(w, 1):
+        # every conv-carrying block kind in the arch bounds the minimum
+        # prompt length (the exact-length prefill tail slice needs >= W-1)
+        cfg = self.cfg
+        w = max((cfg.hyena.short_conv - 1) if cfg.hyena else 1,
+                (cfg.ssm.d_conv - 1) if cfg.ssm else 1,
+                (cfg.rglru.d_conv - 1) if cfg.rglru else 1, 1)
+        if req.prompt_len < w:
             raise ValueError(f"prompt shorter than the short-conv tail ({w})")
         if req.prompt_len + req.max_new_tokens > self.max_len:
             raise ValueError(
@@ -198,11 +277,18 @@ class ContinuousBatchingEngine:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.queue) or self.n_active > 0
+        return (bool(self.queue) or self.n_active > 0
+                or self._pending is not None
+                or self._chunk_state is not None)
+
+    def _slot_is_free(self, b: int) -> bool:
+        # a slot reserved by an in-flight chunked prefill holds its Request
+        # but is not yet active — it must not be handed out again
+        return not self.active[b] and self.slots[b] is None
 
     def _free_slot(self) -> Optional[int]:
         for b in range(self.n_slots):
-            if not self.active[b]:
+            if self._slot_is_free(b):
                 return b
         return None
 
@@ -210,18 +296,28 @@ class ContinuousBatchingEngine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def _bucket_of(self, L: int) -> int:
+        b = max(self._min_bucket, 1 << max(L - 1, 0).bit_length())
+        return min(b, self.max_len)
+
+    def _use_chunked(self, L: int) -> bool:
+        return self._chunk is not None and L > self._chunk
+
     def step(self) -> int:
-        """One scheduler tick: admit up to max_prefills_per_step queued
-        requests into free slots, then one pooled decode step. Returns the
-        number of tokens emitted this tick."""
-        admitted = 0
-        while (self.queue and admitted < self.max_prefills_per_step
-               and self._free_slot() is not None):
-            self._admit(self.queue.popleft(), self._free_slot())
-            admitted += 1
-        emitted = admitted            # each admission emits its first token
-        if self.n_active > 0:
-            emitted += self._decode_all()
+        """One scheduler tick. Overlapped: (1) enqueue the next pooled decode
+        from device-resident state, (2) retire the PREVIOUS tick's sampled
+        tokens to host (append / EOS / eviction), (3) admit queued requests
+        into freed slots — so host bookkeeping and prefills overlap the
+        in-flight decode. Synchronous (`overlap=False`): admit, then decode
+        and retire in the same tick (the original loop). Returns the number
+        of tokens appended to requests during this call."""
+        prev, self._pending = self._pending, None
+        if self._overlap and self.n_active > 0:
+            self._pending = self._dispatch_decode()
+        emitted = self._retire(prev)
+        emitted += self._admit_phase()
+        if not self._overlap and self.n_active > 0:
+            emitted += self._retire(self._dispatch_decode())
         return emitted
 
     def run(self) -> List[Request]:
@@ -231,63 +327,278 @@ class ContinuousBatchingEngine:
         return self.finished
 
     def warmup(self, prompt_lens: Sequence[int]) -> None:
-        """Compile the prefill executable for each prompt length and the
-        pooled decode step, so a timed run measures steady-state serving.
-        Side effect: idle slots advance one (ignored) decode position."""
-        for L in sorted(set(int(x) for x in prompt_lens)):
-            jax.block_until_ready(
-                self._prefill(self.params, jnp.zeros((1, L), jnp.int32)))
-        self.cache, _ = self._decode(self.params, self.cache,
-                                     jnp.asarray(self.last_token)[:, None],
-                                     conv_filters=self._conv_filters)
+        """Compile the serving fast path before a timed run: ONE batched
+        prefill per prompt-length *bucket* (not per distinct length), the
+        chunked-prefill step + finalize when enabled, the pooled decode step,
+        the batched sampler, and the slot-scatter ops. Side effect: idle
+        slots advance one (ignored) decode position."""
+        lens = sorted({int(x) for x in prompt_lens})
+        direct = [L for L in lens if not self._use_chunked(L)]
+
+        def warm_admission_ops(K: int, logits) -> None:
+            # first-token sampler + slot-meta scatter at admission batch size
+            # K; slot index n_slots makes every row a dropped no-op
+            tj = jnp.zeros((K,), jnp.float32)
+            kj = jnp.zeros((K,), jnp.int32)
+            pj = jnp.ones((K,), jnp.float32)
+            toks = self._sample(self._next_key(), logits, temperature=tj,
+                                top_k=kj, top_p=pj)
+            self._temps, self._top_ks, self._top_ps, self._last = self._meta(
+                self._temps, self._top_ks, self._top_ps, self._last,
+                jnp.full((K,), self.n_slots, jnp.int32), tj, kj, pj, toks)
+
+        if self._bucketed:
+            K = self._prefill_batch
+            for bkt in sorted({self._bucket_of(L) for L in direct}):
+                cache1, logits = self._prefill(
+                    self.params, jnp.zeros((K, bkt), jnp.int32),
+                    lengths=jnp.full((K,), bkt, jnp.int32))
+                # dummy scatter (slot index n_slots drops every row)
+                self.cache = self._write_slots(
+                    self.cache, cache1, jnp.full((K,), self.n_slots,
+                                                 jnp.int32))
+                warm_admission_ops(K, logits)
+                self._buckets_used.add(bkt)
+        else:
+            for L in direct:
+                _, logits = self._prefill(self.params,
+                                          jnp.zeros((1, L), jnp.int32))
+                warm_admission_ops(1, logits)
+        if self._chunk is not None and any(self._use_chunked(L) for L in lens):
+            pc = self._new_prefill_cache()
+            pc, logits = self._prefill_chunk(
+                self.params, pc, jnp.zeros((1, self._chunk), jnp.int32), 0,
+                chunk_len=self._chunk, conv_filters=self._chunk_filters)
+            dc = self._finalize(pc, self._chunk)
+            # write + reset slot 0 (free at warmup time) to warm both ops
+            self.cache = self._write_slot(self.cache, dc, 0)
+            self.cache = self._reset_slot(self.cache, 0)
+            warm_admission_ops(1, logits)
+        self.cache, logits = self._decode(self.params, self.cache,
+                                          self._last[:, None],
+                                          conv_filters=self._conv_filters)
+        self._sample(self._next_key(), logits[:, 0, :],
+                     temperature=self._temps, top_k=self._top_ks,
+                     top_p=self._top_ps)
         jax.block_until_ready(self.cache)
 
-    # ------------------------------------------------------------------
-    def _admit(self, req: Request, slot: int) -> None:
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        cache1, logits = self._prefill(self.params, prompt)
-        self.cache = self._write_slot(self.cache, cache1, slot)
-        self.stats["prefills"] += 1
-        self.stats["admitted"] += 1
-        req.status = RUNNING
-        req.slot = slot
-        req.t_admitted = self._clock()
-        self.slots[slot] = req
-        self.active[slot] = True
-        sp = req.sampling
-        self.temps[slot] = sp.temperature
-        self.top_ks[slot] = sp.top_k
-        self.top_ps[slot] = sp.top_p
-        # first generated token comes from the prefill logits (same
-        # convention as GenerationEngine.generate)
-        tok = sample_token(self._next_key(), logits,
-                           temperature=sp.temperature, top_k=sp.top_k,
-                           top_p=sp.top_p)
-        self._append_token(slot, int(tok[0]))
+    def prefill_compile_stats(self) -> Dict[str, Any]:
+        """Executable counts backing the O(#buckets) claim. Note the jit memo
+        is shared across engines with the same (cfg, max_len, mode), so
+        counts are per-configuration, not per-instance."""
+        from repro.serve.metrics import jit_cache_size
+        out: Dict[str, Any] = {
+            "buckets_used": sorted(self._buckets_used),
+            "prefill_executables": jit_cache_size(self._prefill),
+        }
+        if self._prefill_chunk is not None:
+            out["chunk_executables"] = jit_cache_size(self._prefill_chunk)
+        return out
 
-    def _decode_all(self) -> int:
-        toks = jnp.asarray(self.last_token)[:, None]
-        self.cache, logits = self._decode(self.params, self.cache, toks,
+    # ------------------------------------------------------------------
+    # decode: overlapped dispatch / retire
+    # ------------------------------------------------------------------
+    def _dispatch_decode(self):
+        """Enqueue one pooled decode + sample on device state; returns a
+        pending record (slot->request snapshot, device token vector) to be
+        retired after the NEXT dispatch."""
+        self.cache, logits = self._decode(self.params, self.cache,
+                                          self._last[:, None],
                                           conv_filters=self._conv_filters)
+        nxt = self._sample(self._next_key(), logits[:, 0, :],
+                           temperature=self._temps, top_k=self._top_ks,
+                           top_p=self._top_ps)
+        self._last = nxt
         self.stats["decode_steps"] += 1
-        nxt = sample_token_slots(self._next_key(), logits[:, 0, :],
-                                 temperature=jnp.asarray(self.temps),
-                                 top_k=jnp.asarray(self.top_ks),
-                                 top_p=jnp.asarray(self.top_ps))
-        nxt = np.asarray(nxt)
+        snapshot = [(int(b), self.slots[b]) for b in np.nonzero(self.active)[0]]
+        try:
+            nxt.copy_to_host_async()           # double-buffered transfer
+        except AttributeError:
+            pass
+        return (snapshot, nxt)
+
+    def _retire(self, pending) -> int:
+        """Fetch a dispatched tick's tokens (the only host sync point on the
+        decode path) and do the EOS/eviction bookkeeping."""
+        if pending is None:
+            return 0
+        snapshot, nxt_dev = pending
+        nxt = np.asarray(nxt_dev)
         emitted = 0
-        for b in np.nonzero(self.active)[0]:
-            self._append_token(int(b), int(nxt[b]))
-            emitted += 1
+        for b, req in snapshot:
+            # slot may have been evicted (and even re-admitted) since this
+            # tick was dispatched — its speculative token is dropped
+            if self.slots[b] is req and req.status == RUNNING:
+                self._append_token(b, int(nxt[b]))
+                emitted += 1
         return emitted
 
+    # ------------------------------------------------------------------
+    # admission: bucketed batches + chunked long prompts
+    # ------------------------------------------------------------------
+    def _admit_phase(self) -> int:
+        emitted = 0
+        budget = self.max_prefills_per_step
+        if self._chunk_state is not None and budget > 0:
+            emitted += self._advance_chunk()     # one chunk per tick
+            budget -= 1
+        while budget > 0 and self.queue and self._free_slot() is not None:
+            idx = chunked = None
+            for i, r in enumerate(self.queue):
+                if self._use_chunked(r.prompt_len):
+                    if self._chunk_state is None:
+                        idx, chunked = i, True
+                        break
+                    continue          # long prefill in flight; allow bypass
+                idx, chunked = i, False
+                break
+            if idx is None:
+                break
+            if chunked:
+                req = self._pop_queue([idx])[0]
+                self._start_chunked(req, self._free_slot())
+                emitted += self._advance_chunk()
+                budget -= 1
+                continue
+            if self._bucketed:
+                bkt = self._bucket_of(self.queue[idx].prompt_len)
+                free = [b for b in range(self.n_slots)
+                        if self._slot_is_free(b)]
+                limit = min(budget, len(free), self._prefill_batch)
+                take = []
+                for i in range(idx, len(self.queue)):
+                    r = self.queue[i]
+                    if (not self._use_chunked(r.prompt_len)
+                            and self._bucket_of(r.prompt_len) == bkt):
+                        take.append(i)
+                        if len(take) == limit:
+                            break
+                reqs = self._pop_queue(take)
+                emitted += self._admit_batch(reqs, free[:len(reqs)], bkt)
+                budget -= len(reqs)
+            else:
+                req = self._pop_queue([idx])[0]
+                emitted += self._admit_batch([req], [self._free_slot()], None)
+                budget -= 1
+        return emitted
+
+    def _pop_queue(self, indices: List[int]) -> List[Request]:
+        picked = set(indices)
+        out = [self.queue[i] for i in indices]
+        self.queue = deque(r for i, r in enumerate(self.queue)
+                           if i not in picked)
+        return out
+
+    def _admit_batch(self, reqs: List[Request], slots: List[int],
+                     bucket: Optional[int]) -> int:
+        """Prefill `reqs` together and scatter into `slots`. bucket=None is
+        the legacy exact-length batch=1 path (bucket_prompts=False)."""
+        if bucket is None:
+            prompt = jnp.asarray(reqs[0].prompt, jnp.int32)[None]
+            cache1, logits = self._prefill(self.params, prompt)
+            self.cache = self._write_slot(self.cache, cache1, slots[0])
+        else:
+            K = self._prefill_batch
+            toks = np.zeros((K, bucket), np.int32)
+            lens = np.full((K,), bucket, np.int32)     # dummy rows: full
+            slot_idx = np.full((K,), self.n_slots, np.int32)  # dummies drop
+            for j, (req, slot) in enumerate(zip(reqs, slots)):
+                toks[j, :req.prompt_len] = req.prompt
+                lens[j] = req.prompt_len
+                slot_idx[j] = slot
+            cache1, logits = self._prefill(self.params, jnp.asarray(toks),
+                                           lengths=jnp.asarray(lens))
+            self.cache = self._write_slots(self.cache, cache1,
+                                           jnp.asarray(slot_idx))
+            self._buckets_used.add(bucket)
+        self.stats["prefills"] += len(reqs)
+        self.stats["prefill_calls"] += 1
+        return self._register_admissions(reqs, slots, logits)
+
+    def _register_admissions(self, reqs: List[Request], slots: List[int],
+                             logits) -> int:
+        """Sample first tokens from prefill logits (rows 0..len(reqs)-1 are
+        the real requests), push sampling params + last tokens to the device
+        slot vectors, and flip host bookkeeping to RUNNING."""
+        K = logits.shape[0]
+        t = np.zeros(K, np.float32)
+        k = np.zeros(K, np.int32)
+        p = np.ones(K, np.float32)
+        sl = np.full(K, self.n_slots, np.int32)
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            sp = req.sampling
+            t[j], k[j], p[j] = sp.temperature, sp.top_k, sp.top_p
+            sl[j] = slot
+        tj, kj, pj = jnp.asarray(t), jnp.asarray(k), jnp.asarray(p)
+        toks = self._sample(self._next_key(), logits, temperature=tj,
+                            top_k=kj, top_p=pj)
+        self._temps, self._top_ks, self._top_ps, self._last = self._meta(
+            self._temps, self._top_ks, self._top_ps, self._last,
+            jnp.asarray(sl), tj, kj, pj, toks)
+        toks_h = np.asarray(toks)
+        now = self._clock()
+        for j, (req, slot) in enumerate(zip(reqs, slots)):
+            req.status = RUNNING
+            req.slot = slot
+            if math.isnan(req.t_admitted):
+                req.t_admitted = now
+            self.slots[slot] = req
+            self.active[slot] = True
+            self.stats["admitted"] += 1
+            # first generated token comes from the prefill logits (same
+            # convention as GenerationEngine.generate)
+            self._append_token(slot, int(toks_h[j]))
+        return len(reqs)
+
+    # ------------------------------------------------------------------
+    # chunked long-prompt admission
+    # ------------------------------------------------------------------
+    def _new_prefill_cache(self):
+        pc, _ = unzip(init_prefill_cache(self.cfg, 1, self.max_len,
+                                         chunk=self._chunk,
+                                         cache_kind=self._cache_kind))
+        return pc
+
+    def _start_chunked(self, req: Request, slot: int) -> None:
+        req.status = PREFILLING
+        req.slot = slot
+        req.t_admitted = self._clock()
+        self.slots[slot] = req                  # reserve (not yet active)
+        self._chunk_state = {"req": req, "slot": slot,
+                             "pcache": self._new_prefill_cache(), "start": 0}
+
+    def _advance_chunk(self) -> int:
+        """Consume one chunk of the in-flight long prompt; on the final chunk
+        finalize into the reserved slot and emit the first token."""
+        st = self._chunk_state
+        req: Request = st["req"]
+        C = self._chunk
+        cl = min(C, req.prompt_len - st["start"])
+        buf = np.zeros((1, C), np.int32)
+        buf[0, :cl] = req.prompt[st["start"]:st["start"] + cl]
+        st["pcache"], last_logits = self._prefill_chunk(
+            self.params, st["pcache"], jnp.asarray(buf), st["start"],
+            chunk_len=cl, conv_filters=self._chunk_filters)
+        st["start"] += cl
+        self.stats["chunk_steps"] += 1
+        if st["start"] < req.prompt_len:
+            return 0
+        dcache = self._finalize(st["pcache"], req.prompt_len)
+        slot = st["slot"]
+        self.cache = self._write_slot(self.cache, dcache, slot)
+        self.stats["prefills"] += 1
+        self.stats["prefill_calls"] += 1
+        self._chunk_state = None
+        self.slots[slot] = None                 # _register re-claims it
+        return self._register_admissions([req], [slot], last_logits)
+
+    # ------------------------------------------------------------------
     def _append_token(self, slot: int, tok: int) -> None:
         req = self.slots[slot]
         assert req is not None
         if math.isnan(req.t_first_token):
             req.t_first_token = self._clock()
         req.tokens.append(tok)
-        self.last_token[slot] = tok
         if req.eos_id is not None and tok == req.eos_id:
             self._evict(slot, "eos")
         elif len(req.tokens) >= req.max_new_tokens:
@@ -301,9 +612,6 @@ class ContinuousBatchingEngine:
         req.slot = -1
         self.slots[slot] = None
         self.active[slot] = False
-        self.temps[slot] = 0.0
-        self.top_ks[slot] = 0
-        self.top_ps[slot] = 1.0
         self.stats["evicted"] += 1
         self.finished.append(req)
         if self.reset_on_evict:

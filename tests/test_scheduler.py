@@ -69,16 +69,18 @@ def _sequential_greedy(cfg, params, prompts, gens, mode):
 # ---------------------------------------------------------------------------
 # Consistency: interleaved == sequential, token for token
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("overlap", [True, False])
 @pytest.mark.parametrize("mode", ["distilled", "cached_conv"])
-def test_interleaved_matches_sequential_lcsm(hyena_model, mode):
+def test_interleaved_matches_sequential_lcsm(hyena_model, mode, overlap):
     """5 concurrent requests with different prompt lengths through 2 slots
     (forces queueing + eviction + slot reuse) produce exactly the tokens of
-    5 sequential single-request runs — in both LCSM deployment modes."""
+    5 sequential single-request runs — in both LCSM deployment modes, with
+    both the overlapped (async) and synchronous host loops."""
     cfg, params = hyena_model
     prompts = _prompts(cfg.vocab)
     want = _sequential_greedy(cfg, params, prompts, GEN_LENS, mode)
     eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
-                                   mode=mode)
+                                   mode=mode, overlap=overlap)
     reqs = [eng.submit(p, max_new_tokens=g)
             for p, g in zip(prompts, GEN_LENS)]
     eng.run()
@@ -122,10 +124,13 @@ def test_reset_on_evict_is_equivalent(hyena_model):
 # Slot bookkeeping
 # ---------------------------------------------------------------------------
 def test_admission_eviction_bookkeeping(hyena_model):
+    # overlap=False: this test asserts host-visible state between individual
+    # ticks, which the synchronous loop defines (the overlapped loop retires
+    # each tick's tokens one step later by design)
     cfg, params = hyena_model
     prompts = _prompts(cfg.vocab)[:3]
     eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
-                                   max_prefills_per_step=2)
+                                   max_prefills_per_step=2, overlap=False)
     reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
     assert [r.status for r in reqs] == ["queued"] * 3
     eng.step()

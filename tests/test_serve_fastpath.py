@@ -1,0 +1,228 @@
+"""Serving fast path: bucketed batch prefill, chunked (resumable) prefill,
+and the async overlapped host loop.
+
+Invariants:
+  * bucket-padded prefill (per-row `lengths`) produces caches and last
+    logits identical to exact-length prefill, per row, in all three cache
+    kinds (distilled modal state, cached-conv kv, attention KV) and for the
+    windowed ring layout;
+  * chunked prefill (prefill_from_cache -> finalize_prefill_cache) matches
+    one-shot prefill, including a final partial chunk that splits the prompt
+    mid-bucket;
+  * the full engine — bucketing + chunking + overlapped loop — is token-for-
+    token identical to sequential generation in all three modes;
+  * a mixed-prompt-length run compiles <= #buckets + 1 prefill executables
+    (the O(#buckets) claim, asserted via the jit executable cache), and the
+    post-warmup steady state triggers no further XLA compilation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ATTN, HYENA, LOCAL_ATTN, HyenaConfig, ModelConfig
+from repro.distributed.sharding import unzip
+from repro.models.model import (finalize_prefill_cache, init_params,
+                                init_prefill_cache, materialize_conv_filters,
+                                prefill, prefill_from_cache)
+from repro.serve.engine import GenerationEngine
+from repro.serve.metrics import count_compiles
+from repro.serve.scheduler import ContinuousBatchingEngine
+
+MAX_LEN = 48
+PROMPT_LENS = (4, 7, 12, 20, 9)
+GEN_LENS = (8, 5, 11, 6, 9)
+
+
+def _hyena_cfg(name="fastpath-hyena"):
+    return ModelConfig(name=name, family="lcsm", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=64, vocab=64, act="gelu", norm="layernorm",
+                       pattern=(HYENA,),
+                       hyena=HyenaConfig(n_filter_heads=2, filter_order=16,
+                                         filter_emb=9, distill_order=8),
+                       max_seq=512, dtype="float32")
+
+
+def _attn_cfg(name="fastpath-attn", pattern=(ATTN,), window=0):
+    return ModelConfig(name=name, family="dense", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab=64, act="gelu", norm="layernorm",
+                       pattern=pattern, window=window, max_seq=512,
+                       dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def hyena_model():
+    cfg = _hyena_cfg()
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def attn_model():
+    cfg = _attn_cfg()
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _prompts(vocab, lens=PROMPT_LENS, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=n).astype(np.int32) for n in lens]
+
+
+def _leafdict(tree):
+    return {str(k): np.asarray(v)
+            for k, v in jax.tree_util.tree_leaves_with_path(tree)}
+
+
+def _assert_cache_rows_close(got, want, row, msg):
+    """Compare slot `row` of a batched cache against row 0 of a batch=1
+    cache, leaf by leaf. bf16 leaves (attention kv) get a bf16-ulp
+    tolerance; everything else is compared tightly."""
+    ga, wa = _leafdict(got["groups"]), _leafdict(want["groups"])
+    assert ga.keys() == wa.keys()
+    for k in ga:
+        g, w = ga[k][:, row], wa[k][:, 0]
+        tol = dict(rtol=2e-4, atol=2e-5)
+        if g.dtype == np.dtype(jnp.bfloat16) or w.dtype == np.dtype(jnp.bfloat16):
+            tol = dict(rtol=1e-2, atol=1e-2)
+        np.testing.assert_allclose(g.astype(np.float32), w.astype(np.float32),
+                                   err_msg=f"{msg}/{k}", **tol)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed (padded, per-row lengths) prefill == exact prefill
+# ---------------------------------------------------------------------------
+CASES = [("hyena", "native"), ("hyena", "conv"), ("attn", "native"),
+         ("local", "native")]
+
+
+@pytest.mark.parametrize("arch,kind", CASES)
+def test_bucketed_prefill_matches_exact(hyena_model, attn_model, arch, kind):
+    if arch == "hyena":
+        cfg, params = hyena_model
+    elif arch == "attn":
+        cfg, params = attn_model
+    else:   # windowed ring layout
+        cfg = _attn_cfg("fastpath-local", pattern=(LOCAL_ATTN,), window=16)
+        params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    lens = [4, 7, 12, 20]
+    P = 32
+    prompts = _prompts(cfg.vocab, lens)
+    toks = np.zeros((len(lens), P), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    got, last = prefill(params, jnp.asarray(toks), cfg, max_len=MAX_LEN,
+                        cache_kind=kind, lengths=jnp.asarray(lens))
+    assert list(np.asarray(got["pos"])) == lens
+    for i, p in enumerate(prompts):
+        want, lastE = prefill(params, jnp.asarray(p)[None], cfg,
+                              max_len=MAX_LEN, cache_kind=kind)
+        np.testing.assert_allclose(np.asarray(last)[i], np.asarray(lastE)[0],
+                                   rtol=2e-4, atol=2e-5)
+        _assert_cache_rows_close(got, want, i, f"{arch}/{kind}/row{i}")
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill == exact prefill (boundary splits the prompt mid-bucket)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,kind", CASES)
+def test_chunked_prefill_matches_exact(hyena_model, attn_model, arch, kind):
+    if arch == "hyena":
+        cfg, params = hyena_model
+    elif arch == "attn":
+        cfg, params = attn_model
+    else:
+        cfg = _attn_cfg("fastpath-local", pattern=(LOCAL_ATTN,), window=16)
+        params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    L, C = 21, 8                       # final chunk is partial (21 = 8+8+5)
+    p = _prompts(cfg.vocab, [L])[0]
+    filters = (materialize_conv_filters(params, cfg, MAX_LEN)
+               if cfg.hyena else None)
+    want, lastE = prefill(params, jnp.asarray(p)[None], cfg, max_len=MAX_LEN,
+                          cache_kind=kind)
+    pc, _ = unzip(init_prefill_cache(cfg, 1, MAX_LEN, chunk=C,
+                                     cache_kind=kind))
+    start = 0
+    while start < L:
+        cl = min(C, L - start)
+        buf = np.zeros((1, C), np.int32)
+        buf[0, :cl] = p[start:start + cl]
+        pc, last = prefill_from_cache(params, pc, jnp.asarray(buf), start,
+                                      cfg, MAX_LEN, chunk_len=cl,
+                                      conv_filters=filters, cache_kind=kind)
+        start += cl
+    got = finalize_prefill_cache(pc, L, cfg, MAX_LEN, cache_kind=kind)
+    assert int(np.asarray(got["pos"])) == L
+    np.testing.assert_allclose(np.asarray(last)[0], np.asarray(lastE)[0],
+                               rtol=2e-4, atol=2e-5)
+    _assert_cache_rows_close(got, want, 0, f"chunked/{arch}/{kind}")
+
+
+# ---------------------------------------------------------------------------
+# Full engine: bucketing + chunking + overlapped loop == sequential
+# ---------------------------------------------------------------------------
+def _sequential_greedy(cfg, params, prompts, gens, mode):
+    eng = GenerationEngine(params, cfg, max_len=MAX_LEN, mode=mode)
+    return [np.asarray(eng.generate(jax.random.PRNGKey(1),
+                                    jnp.asarray(p)[None], g)[0][0])
+            for p, g in zip(prompts, gens)]
+
+
+@pytest.mark.parametrize("mode,arch", [("distilled", "hyena"),
+                                       ("cached_conv", "hyena"),
+                                       ("distilled", "attn")])
+def test_fastpath_engine_matches_sequential(hyena_model, attn_model, mode,
+                                            arch):
+    """prefill_chunk=8 routes the 9/12/20-token prompts through resumable
+    chunked prefill (crossing chunk boundaries mid-bucket) while 4/7 go
+    through the bucketed batch path, all under the overlapped loop — output
+    must equal sequential single-request generation, token for token."""
+    cfg, params = hyena_model if arch == "hyena" else attn_model
+    prompts = _prompts(cfg.vocab)
+    want = _sequential_greedy(cfg, params, prompts, GEN_LENS, mode)
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode=mode, max_prefills_per_step=2,
+                                   prefill_chunk=8, overlap=True)
+    eng.warmup(PROMPT_LENS)
+    reqs = [eng.submit(p, max_new_tokens=g)
+            for p, g in zip(prompts, GEN_LENS)]
+    eng.run()
+    for r, w in zip(reqs, want):
+        assert r.status == "finished"
+        np.testing.assert_array_equal(np.asarray(r.tokens), w)
+    assert eng.stats["chunk_steps"] > 0          # long prompts were chunked
+    assert eng.stats["prefill_calls"] < eng.stats["prefills"] + \
+        eng.stats["chunk_steps"]                 # some admissions batched
+
+
+# ---------------------------------------------------------------------------
+# Compile counts: O(#buckets), not O(#distinct prompt lengths)
+# ---------------------------------------------------------------------------
+def test_prefill_compiles_at_most_buckets_plus_one():
+    """A mixed-prompt-length run (7 distinct lengths, 3 buckets + chunked
+    long prompts) compiles <= #buckets + 1 prefill executables, and after
+    warmup the serving loop triggers NO further XLA compilation. Uses a
+    uniquely-named config: the jit memo is shared per-config across engines,
+    so a fresh name isolates the executable counts."""
+    cfg = _hyena_cfg("fastpath-compile-count")
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    lens = (4, 5, 7, 9, 12, 15, 20)              # buckets {8, 16} + chunked
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=3, max_len=MAX_LEN,
+                                   max_prefills_per_step=2, prefill_chunk=16,
+                                   overlap=True)
+    eng.warmup(lens)
+    with count_compiles() as scope:
+        for g, p in zip((3, 4, 5, 3, 4, 5, 3), _prompts(cfg.vocab, lens)):
+            eng.submit(p, max_new_tokens=g)
+        eng.run()
+    assert scope.compiles == 0, "steady-state serving must not compile"
+    stats = eng.prefill_compile_stats()
+    n_buckets = len(stats["buckets_used"])
+    assert n_buckets == 2, stats
+    assert stats["prefill_executables"] is not None
+    assert stats["prefill_executables"] <= n_buckets
+    assert stats["prefill_executables"] + stats["chunk_executables"] \
+        <= n_buckets + 1
+    assert len(eng.finished) == len(lens)
