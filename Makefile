@@ -2,7 +2,7 @@
 # default, so `test-fast` is the tier-1 suite the driver runs).
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-all test-slow bench bench-serve
+.PHONY: test-fast test-all test-slow bench bench-serve bench-check
 
 test-fast:
 	$(PY) -m pytest -x -q
@@ -16,7 +16,17 @@ test-slow:
 bench:
 	$(PY) -m benchmarks.run
 
-# serving perf trajectory: tok/s, latency/TTFT percentiles, and prefill
-# compile counts per mode, written to BENCH_serve.json for cross-PR tracking
+# serving perf trajectory: tok/s (+ decode tok/s and speculative acceptance),
+# latency/TTFT percentiles, and prefill compile counts per mode, written to
+# BENCH_serve.json for cross-PR tracking
 bench-serve:
 	$(PY) -m benchmarks.run --only serve_stream --json BENCH_serve.json
+
+# regression gate: re-run the serving bench and compare against the
+# committed baseline (fails on a >15% tok/s drop or a speculative-decode
+# floor violation). CI uses this with the pre-bench copy as baseline.
+bench-check:
+	cp BENCH_serve.json /tmp/BENCH_baseline.json
+	$(MAKE) bench-serve
+	$(PY) -m benchmarks.check_regression \
+	    --baseline /tmp/BENCH_baseline.json --new BENCH_serve.json

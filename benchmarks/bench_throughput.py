@@ -59,13 +59,15 @@ PROMPT_LENS = (32, 48, 64, 96, 128)     # 5 distinct lengths, 3 buckets
 GEN_TOKENS = (16, 48)
 N_SLOTS, MAX_LEN = 4, 192
 PREFILL_BATCH = 2
+SPEC_K, DRAFT_ORDER = 4, 4              # speculative case (greedy sampling)
 
 
-def _stream_case(cfg, params, mode):
-    from repro.serve.metrics import count_compiles
+def _stream_case(cfg, params, mode, spec_k=0, draft_order=None):
+    from repro.serve.metrics import count_compiles, speculative_summary
     eng = ContinuousBatchingEngine(params, cfg, n_slots=N_SLOTS,
                                    max_len=MAX_LEN, mode=mode,
-                                   max_prefills_per_step=PREFILL_BATCH)
+                                   max_prefills_per_step=PREFILL_BATCH,
+                                   spec_k=spec_k, draft_order=draft_order)
     eng.warmup(PROMPT_LENS)
     stream = synthesize_request_stream(
         np.random.default_rng(0), N_REQ, rate=RATE, prompt_lens=PROMPT_LENS,
@@ -78,6 +80,10 @@ def _stream_case(cfg, params, mode):
     m["steady_state_compiles"] = scope.compiles
     m["prefill_calls"] = eng.stats["prefill_calls"]
     m["prefills"] = eng.stats["prefills"]
+    if spec_k:
+        m.update(speculative_summary(eng.stats, spec_k))
+        m["spec_k"] = spec_k
+        m["draft_order"] = eng.draft_order
     return m
 
 
@@ -89,19 +95,25 @@ def stream_main(out):
     results = {"prompt_lens": list(PROMPT_LENS), "n_requests": N_REQ,
                "rate_req_s": RATE, "n_slots": N_SLOTS,
                "prefill_batch": PREFILL_BATCH, "modes": {}}
-    for label, cfg, params, mode in (
-            ("distilled", hcfg, hparams, "distilled"),
-            ("cached_conv", hcfg, hparams, "cached_conv"),
-            ("attention_kv", tcfg, tparams, "distilled")):
-        m = _stream_case(cfg, params, mode)
+    for label, cfg, params, mode, spec in (
+            ("distilled", hcfg, hparams, "distilled", 0),
+            ("distilled_spec", hcfg, hparams, "distilled", SPEC_K),
+            ("cached_conv", hcfg, hparams, "cached_conv", 0),
+            ("attention_kv", tcfg, tparams, "distilled", 0)):
+        m = _stream_case(cfg, params, mode, spec_k=spec,
+                         draft_order=DRAFT_ORDER if spec else None)
         results["modes"][label] = m
+        extra = (f" acc={m['acceptance_rate']:.2f}"
+                 f" tok_per_round={m['tokens_per_slot_round']:.2f}"
+                 if spec else "")
         out(row(f"serve_stream/{label}", m["wall_s"] * 1e6,
                 f"tok_s={m['tok_per_s']:.0f} "
+                f"decode_tok_s={m['decode_tok_per_s']:.0f} "
                 f"p50_ms={m['p50_latency_s'] * 1e3:.1f} "
                 f"p99_ms={m['p99_latency_s'] * 1e3:.1f} "
                 f"p50_ttft_ms={m['p50_ttft_s'] * 1e3:.1f} "
                 f"p99_ttft_ms={m['p99_ttft_s'] * 1e3:.1f} "
                 f"prefill_exec={m['prefill_executables']}"
                 f"/{len(PROMPT_LENS)}lens "
-                f"compiles_in_run={m['steady_state_compiles']}"))
+                f"compiles_in_run={m['steady_state_compiles']}" + extra))
     return {"serve_stream": results}

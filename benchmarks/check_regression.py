@@ -1,0 +1,94 @@
+"""Serving-benchmark regression gate.
+
+Compares a fresh `make bench-serve` run against the committed baseline
+(BENCH_serve.json at the repo root) and fails if any serve_stream mode's
+throughput dropped by more than the threshold (default 15%). Also enforces
+the speculative-decoding floor: the `distilled_spec` mode must report
+decode tok/s at least `--spec-floor` (default 1.3x) times the BASELINE
+distilled mode's tok/s — the PR-3 acceptance criterion, kept as a ratchet.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      --baseline BENCH_baseline.json --new BENCH_serve.json
+
+CI runs this with the committed file as baseline (copied aside before the
+bench overwrites it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _modes(doc):
+    return doc.get("serve_stream", {}).get("modes", {})
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_serve.json to compare against")
+    ap.add_argument("--new", default="BENCH_serve.json",
+                    help="freshly produced benchmark file")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated fractional tok/s drop per mode")
+    ap.add_argument("--spec-floor", type=float, default=1.3,
+                    help="when the BASELINE predates speculative decoding "
+                         "(no distilled_spec mode), require the new "
+                         "distilled_spec decode tok/s to reach this multiple "
+                         "of the baseline distilled tok/s (0 disables). "
+                         "Once the baseline itself contains distilled_spec, "
+                         "the ordinary per-mode drop check covers it — an "
+                         "absolute multiple of the ever-faster committed "
+                         "distilled number would ratchet unsatisfiably.")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = _modes(json.load(f))
+    with open(args.new) as f:
+        new = _modes(json.load(f))
+
+    failures = []
+    for mode, bm in sorted(base.items()):
+        nm = new.get(mode)
+        if nm is None:
+            failures.append(f"mode {mode!r} disappeared from the new run")
+            continue
+        old_tps, new_tps = bm["tok_per_s"], nm["tok_per_s"]
+        floor = old_tps * (1.0 - args.threshold)
+        status = "ok" if new_tps >= floor else "REGRESSION"
+        print(f"[bench-check] {mode:15s} {old_tps:8.1f} -> {new_tps:8.1f} "
+              f"tok/s (floor {floor:.1f}) {status}")
+        if new_tps < floor:
+            failures.append(
+                f"{mode}: tok/s dropped {old_tps:.1f} -> {new_tps:.1f} "
+                f"(> {args.threshold:.0%})")
+
+    if args.spec_floor > 0 and "distilled" in base \
+            and "distilled_spec" not in base:
+        spec = new.get("distilled_spec")
+        if spec is None:
+            failures.append("distilled_spec mode missing from the new run")
+        else:
+            ref = base["distilled"]["tok_per_s"]
+            got = spec.get("decode_tok_per_s", spec["tok_per_s"])
+            need = args.spec_floor * ref
+            status = "ok" if got >= need else "BELOW FLOOR"
+            print(f"[bench-check] distilled_spec decode {got:.1f} tok/s vs "
+                  f"{args.spec_floor:.2f}x baseline distilled "
+                  f"({ref:.1f}) = {need:.1f} {status}")
+            if got < need:
+                failures.append(
+                    f"distilled_spec decode tok/s {got:.1f} < "
+                    f"{args.spec_floor:.2f}x baseline distilled {ref:.1f}")
+
+    if failures:
+        for msg in failures:
+            print(f"[bench-check] FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("[bench-check] all serving throughput checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -50,11 +50,15 @@ def balanced_truncation_modal(h: jnp.ndarray, d: int) -> ModalSSM:
 
 
 def modal_truncation(ssm: ModalSSM, n: int, refit: bool = False,
-                     h: jnp.ndarray = None) -> ModalSSM:
+                     h: jnp.ndarray = None, return_indices: bool = False):
     """E.3.1: keep the n most influential modes of a diagonal SSM.
 
     Modes ranked by the h-inf bound |R_i| / |1 - |lam_i|| (Eq. E.2).
     With refit=True the kept residues are re-solved against h (linear LSQ).
+    With return_indices=True also returns the kept-mode indices (..., n)
+    into the original mode axis — the truncated system's state is exactly
+    that sub-vector of the full system's state (poles are untouched), which
+    is what lets a speculative draft share the serving cache.
     """
     a = jnp.exp(ssm.log_a)
     infl = jnp.abs(ssm.residues()) / jnp.clip(jnp.abs(1.0 - a), 1e-6)
@@ -66,4 +70,6 @@ def modal_truncation(ssm: ModalSSM, n: int, refit: bool = False,
         R = fit_residues(out.poles(), h)
         out = out._replace(R_re=jnp.real(R).astype(jnp.float32),
                            R_im=jnp.imag(R).astype(jnp.float32))
+    if return_indices:
+        return out, idx
     return out

@@ -17,3 +17,15 @@ def set_dryrun_unroll(v: bool) -> None:
 
 def scan_unroll(length: int) -> int:
     return length if DRYRUN_UNROLL else 1
+
+
+# Serving decode is latency-critical and its layer-group scans are small
+# (the pattern period, not n_layers): scanning over stacked params makes XLA
+# dynamic-slice every leaf per iteration, which measures ~2x the whole step
+# cost at serving widths on CPU. Decode paths unroll up to this many groups;
+# training/prefill keep scans rolled (HLO size / compile-time friendly).
+DECODE_UNROLL_MAX = 8
+
+
+def decode_unroll(length: int) -> int:
+    return length if (DRYRUN_UNROLL or length <= DECODE_UNROLL_MAX) else 1

@@ -84,6 +84,15 @@ def main():
                     help="disable the async overlapped host loop")
     ap.add_argument("--prefills-per-step", type=int, default=2,
                     help="max admissions per tick == bucketed prefill batch")
+    # self-speculative decoding (serve/speculative.py)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft this many tokens per "
+                         "slot per tick with the low-order modal truncation "
+                         "of the serving SSM and verify them in one "
+                         "multi-token step (0 disables)")
+    ap.add_argument("--draft-order", type=int, default=None,
+                    help="real state dim of the draft's modal truncation "
+                         "(default: half the serving distill order)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -134,11 +143,14 @@ def _serve_stream(params, cfg, args):
                                    bucket_prompts=not args.no_bucket,
                                    prefill_chunk=args.chunk,
                                    overlap=not args.sync_loop,
-                                   max_prefills_per_step=args.prefills_per_step)
+                                   max_prefills_per_step=args.prefills_per_step,
+                                   spec_k=args.spec_k,
+                                   draft_order=args.draft_order)
     print(f"[serve] warming up prompt lengths {plens} "
           f"({'bucketed' if not args.no_bucket else 'exact-length'} prefill"
           f"{', chunk=%d' % args.chunk if args.chunk else ''}, "
-          f"{'overlapped' if not args.sync_loop else 'sync'} loop) ...")
+          f"{'overlapped' if not args.sync_loop else 'sync'} loop"
+          f"{', spec_k=%d' % args.spec_k if args.spec_k else ''}) ...")
     eng.warmup(plens)
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                               top_p=args.top_p)
@@ -150,11 +162,18 @@ def _serve_stream(params, cfg, args):
     print(f"[serve] mode={args.mode} slots={args.slots} "
           f"{int(m['n_requests'])} requests / {int(m['n_tokens'])} tokens "
           f"in {m['wall_s']:.2f}s")
-    print(f"[serve] tok/s={m['tok_per_s']:.1f}  "
+    print(f"[serve] tok/s={m['tok_per_s']:.1f} "
+          f"decode_tok/s={m['decode_tok_per_s']:.1f}  "
           f"latency p50={m['p50_latency_s']*1e3:.1f}ms "
           f"p99={m['p99_latency_s']*1e3:.1f}ms  "
           f"ttft p50={m['p50_ttft_s']*1e3:.1f}ms "
           f"p99={m['p99_ttft_s']*1e3:.1f}ms")
+    if args.spec_k:
+        from repro.serve.metrics import speculative_summary
+        s = speculative_summary(eng.stats, args.spec_k)
+        print(f"[serve] speculative: acceptance={s['acceptance_rate']:.2f} "
+              f"tokens/slot-round={s['tokens_per_slot_round']:.2f} "
+              f"(draft order {eng.draft_order}, K={args.spec_k})")
     print(f"[serve] scheduler stats: {eng.stats}")
     print(f"[serve] prefill compile stats: {eng.prefill_compile_stats()}")
 

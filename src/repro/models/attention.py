@@ -283,6 +283,100 @@ def attention_prefill_chunk(params, cache, x, positions, start, chunk_len,
 
 
 # ---------------------------------------------------------------------------
+# Multi-token decode on the decode cache (speculative verify / replay)
+# ---------------------------------------------------------------------------
+def attention_decode_chunk(params, cache, x, pos, active_len, cfg, *,
+                           window=0, ctx: ShardCtx = NOCTX):
+    """Consume up to C tokens per slot against the DECODE cache (linear or
+    ring layout). x: (B, C, D); pos: (B,) per-slot positions; active_len:
+    (B,) — row b consumes only its first active_len tokens: positions at
+    index >= active_len leave the k/v buffers (and ring slot_pos) untouched,
+    which is what lets a speculative verify be replayed with a shorter
+    accepted prefix. Returns (cache, y (B, C, D)) with logits-bearing
+    outputs at every position (invalid positions produce garbage that the
+    caller masks)."""
+    B, C, _ = x.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    active_len = jnp.asarray(active_len, jnp.int32)
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B,C)
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"].astype(x.dtype))
+    k_new = jnp.einsum("bsd,dnh->bsnh", x, params["wk"].astype(x.dtype))
+    v_new = jnp.einsum("bsd,dnh->bsnh", x, params["wv"].astype(x.dtype))
+    q = apply_rope(q, positions, cfg.rope_theta,
+                   cfg.m_rope_sections if cfg.m_rope else None)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta,
+                       cfg.m_rope_sections if cfg.m_rope else None)
+    ring = "slot_pos" in cache
+    size = cache["k"].shape[1]
+    # Attention READS the pre-write cache plus the chunk's own keys as a
+    # separate segment: scattering first would let a later chunk position's
+    # ring write evict a key still inside an earlier position's window
+    # (ring size == window), silently truncating that query's context.
+    T = cache["k"].shape[1]
+    Hkv = cache["k"].shape[2]
+    G = q.shape[2] // Hkv
+    qg = q.reshape(B, C, Hkv, G, q.shape[-1])
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s_old = jnp.einsum("bckgh,btkh->bkgct", qg,
+                       cache["k"].astype(q.dtype)).astype(jnp.float32) * scale
+    # past-segment mask: only positions strictly BEFORE this chunk (also
+    # drops stale rows an evicted occupant left at indices >= pos)
+    if ring:
+        sp = cache["slot_pos"]                                      # (B, eff)
+        m_old = (sp[:, None, :] >= 0) & (sp[:, None, :] < pos[:, None, None])
+        if window > 0:
+            m_old = m_old & (sp[:, None, :] > positions[:, :, None] - window)
+    else:
+        kpos = jnp.arange(T, dtype=jnp.int32)
+        m_old = kpos[None, None, :] < pos[:, None, None]            # (B,C,T)
+        if window > 0:
+            m_old = m_old & (kpos[None, None, :] >
+                             positions[:, :, None] - window)
+    s_old = jnp.where(m_old[:, None, None, :, :], s_old, -1e30)
+    # in-chunk segment: key i visible to query c iff i <= c (and in-window).
+    # Round-trip through the cache dtype first: the sequential decode path
+    # reads these keys back from the (bf16) cache, and greedy identity with
+    # it requires matching that precision.
+    k_chunk = k_new.astype(cache["k"].dtype)
+    v_chunk = v_new.astype(cache["v"].dtype)
+    s_new = jnp.einsum("bckgh,bikh->bkgci", qg,
+                       k_chunk.astype(q.dtype)).astype(jnp.float32) * scale
+    ii = jnp.arange(C, dtype=jnp.int32)
+    m_new = ii[None, :] <= ii[:, None]                              # (C, C)
+    if window > 0:
+        m_new = m_new & (ii[None, :] > ii[:, None] - window)
+    s_new = jnp.where(m_new[None, None, None], s_new, -1e30)
+    scores = jnp.concatenate([s_old, s_new], axis=-1)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    vv = jnp.concatenate([cache["v"].astype(q.dtype),
+                          v_chunk.astype(q.dtype)], axis=1)
+    o = jnp.einsum("bkgct,btkh->bckgh", probs, vv)
+    o = o.reshape(B, C, Hkv * G, o.shape[-1])
+    y = jnp.einsum("bsnh,nhd->bsd", o, params["wo"].astype(x.dtype))
+
+    # per-row write indices; idle rows past the buffer end clamp (linear) or
+    # wrap (ring) — both are masked out at read time and fully rewritten
+    widx = positions % size if ring else jnp.clip(positions, 0, size - 1)
+    valid = jnp.arange(C)[None, :] < active_len[:, None]               # (B,C)
+    b = jnp.arange(B)[:, None]
+
+    def scatter(buf, new):
+        tgt = (B, C) + buf.shape[2:]
+        idx = jnp.broadcast_to(widx.reshape((B, C) + (1,) * (buf.ndim - 2)),
+                               tgt)
+        cur = jnp.take_along_axis(buf, idx, axis=1)
+        sel = jnp.where(valid.reshape((B, C) + (1,) * (buf.ndim - 2)),
+                        new.astype(buf.dtype), cur)
+        return buf.at[b, widx].set(sel)
+
+    new_cache = {"k": scatter(cache["k"], k_new),
+                 "v": scatter(cache["v"], v_new)}
+    if ring:
+        new_cache["slot_pos"] = scatter(cache["slot_pos"], positions)
+    return new_cache, y
+
+
+# ---------------------------------------------------------------------------
 # Decode with KV cache
 # ---------------------------------------------------------------------------
 def init_kv_cache(batch: int, max_len: int, n_kv: int, hd: int, dtype=jnp.bfloat16):

@@ -384,6 +384,144 @@ def hyena_decode_cached_conv(params, cache, x, pos, cfg, filters,
 
 
 # ---------------------------------------------------------------------------
+# Multi-token decode on the decode cache (speculative verify / replay)
+# ---------------------------------------------------------------------------
+def _short_conv_rows(params, tail, u, active_len):
+    """Per-row resumable short conv: u (B, C, D'), tail (B, W-1, D').
+    Returns (new_tail, y (B, C, D'), ext (B, W-1+C, D')) where row b's new
+    tail is the W-1 inputs ending at its own active_len (inputs past it
+    never enter the carried state). `ext` is the concatenated input window —
+    `conv_tail_gather(ext, W-1, W-1+j)` yields the tail after ANY j <= C
+    tokens, which is how the speculative selection-commit rolls a conv tail
+    to the accepted position without a replay."""
+    from repro.models.layers import conv_tail_gather
+    w = params["w"]
+    width = w.shape[0]
+    C = u.shape[1]
+    ext = jnp.concatenate([tail, u], axis=1)          # promotes to f32 tail
+    wc = w.astype(ext.dtype)
+    y = jnp.zeros_like(ext[:, width - 1:, :])
+    for i in range(width):
+        y = y + ext[:, i:i + C, :] * wc[i]
+    if width == 1:
+        return tail, y, ext
+    new_tail = conv_tail_gather(ext, width - 1, (width - 1) + active_len)
+    return new_tail.astype(tail.dtype), y, ext
+
+
+def hyena_decode_chunk(params, cache, x, active_len, cfg, *,
+                       ctx: ShardCtx = NOCTX, return_states: bool = False):
+    """Consume up to C tokens per slot with the distilled modal recurrence.
+    x: (B, C, D); active_len (B,) — row b's modal state and conv tail advance
+    by exactly its first active_len tokens (the rest compute garbage outputs
+    the caller ignores).
+
+    The state trajectory is an unrolled C-step recurrence (C is tiny — the
+    speculation window) with per-row keep-masking, using the SAME update
+    formulas as the one-token `ssm_decode` step (lam precomputed once,
+    bit-identical values), so a replay over an accepted prefix is
+    bit-identical to having decoded those tokens sequentially. The
+    Prop.-3.3 readout y_j = Re[R X_j] + h0 u_j is then evaluated for all
+    positions in ONE batched einsum over the stacked states — the verify
+    path is op-overhead-bound, so keeping the scan body to the 6 state
+    multiplies matters. With return_states=True the per-step trajectory and
+    the conv input window are also returned, so a speculative commit can
+    SELECT the state after any accepted prefix length instead of replaying
+    (states past a row's active_len are frozen — only indices <= active_len
+    are ever selected)."""
+    B, C, D = x.shape
+    h = cfg.hyena
+    N = D // h.n_filter_heads
+    qkv = jnp.einsum("bsd,dge->bsge", x, params["wqkv"].astype(x.dtype))
+    qkv = qkv.reshape(B, C, 3 * D)
+    active_len = jnp.asarray(active_len, jnp.int32)
+    new_tail, qkv, ext = _short_conv_rows(params["short_conv"], cache["conv"],
+                                          qkv, active_len)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    u = (k * v).astype(jnp.float32)                       # (B, C, D)
+    valid = jnp.arange(C)[None, :] < active_len[:, None]  # (B, C)
+
+    dp = params["distilled"]
+    log_a = jnp.repeat(dp["log_a"], N, axis=0)            # (D, d)
+    theta = jnp.repeat(dp["theta"], N, axis=0)
+    R_re = jnp.repeat(dp["R_re"], N, axis=0)
+    R_im = jnp.repeat(dp["R_im"], N, axis=0)
+    h0 = jnp.repeat(dp["h0"], N, axis=0)
+    lr = jnp.exp(log_a) * jnp.cos(theta)                  # as in ssm_decode
+    li = jnp.exp(log_a) * jnp.sin(theta)
+
+    def body(carry, inp):
+        xr, xi = carry
+        u_t, keep = inp                                   # (B, D), (B,)
+        nxr = lr[None] * xr - li[None] * xi + u_t[..., None]
+        nxi = lr[None] * xi + li[None] * xr
+        keep = keep[:, None, None]
+        nxr = jnp.where(keep, nxr, xr)
+        nxi = jnp.where(keep, nxi, xi)
+        return (nxr, nxi), (xr, xi)       # emit the state BEFORE the token
+
+    (nxr, nxi), (pre_re, pre_im) = jax.lax.scan(
+        body, (cache["x_re"], cache["x_im"]),
+        (jnp.moveaxis(u, 1, 0), jnp.moveaxis(valid, 1, 0)), unroll=C)
+    # batched Prop.-3.3 readout over all C positions at once
+    y = jnp.einsum("cbed,ed->bce", pre_re, R_re) \
+        - jnp.einsum("cbed,ed->bce", pre_im, R_im) + h0 * u
+    out = (q.astype(jnp.float32) * y).astype(x.dtype)
+    new_cache = {"conv": new_tail, "x_re": nxr, "x_im": nxi}
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    if return_states:
+        # trajectory AFTER each token j (j = 1..C): positions 1..C-1 come
+        # from the emitted pre-token states, position C from the final carry
+        xs_re = jnp.concatenate([jnp.moveaxis(pre_re[1:], 0, 1),
+                                 nxr[:, None]], axis=1)   # (B, C, D, d)
+        xs_im = jnp.concatenate([jnp.moveaxis(pre_im[1:], 0, 1),
+                                 nxi[:, None]], axis=1)
+        aux = {"xs_re": xs_re, "xs_im": xs_im, "ext": ext}
+        return new_cache, out, aux
+    return new_cache, out
+
+
+def hyena_decode_cached_conv_chunk(params, cache, x, pos, active_len, cfg,
+                                   filters, *, ctx: ShardCtx = NOCTX):
+    """Cached-conv (Lemma 2.1) multi-token decode: write up to C new k.v
+    products per slot at positions [pos_b, pos_b + active_len_b) and emit the
+    exact causal convolution with the TRUE long filter at every chunk
+    position. x: (B, C, D); pos/active_len: (B,)."""
+    B, C, D = x.shape
+    h_full, h0 = filters                                  # (M, Lmax'), (M,)
+    M = h_full.shape[0]
+    qkv = jnp.einsum("bsd,dge->bsge", x,
+                     params["wqkv"].astype(x.dtype)).reshape(B, C, 3 * D)
+    pos = jnp.asarray(pos, jnp.int32)
+    active_len = jnp.asarray(active_len, jnp.int32)
+    new_tail, qkv, _ = _short_conv_rows(params["short_conv"],
+                                        cache["conv"], qkv, active_len)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    kvc = (k * v).astype(cache["kv"].dtype)               # (B, C, D)
+    Lmax = cache["kv"].shape[1]
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    widx = jnp.clip(positions, 0, Lmax - 1)
+    valid = jnp.arange(C)[None, :] < active_len[:, None]
+    b = jnp.arange(B)[:, None]
+    cur = jnp.take_along_axis(cache["kv"],
+                              jnp.broadcast_to(widx[..., None], (B, C, D)),
+                              axis=1)
+    kv_cache = cache["kv"].at[b, widx].set(
+        jnp.where(valid[..., None], kvc, cur))
+    # h_rev[b, c, j] = h[pos_b + c - j] for j <= pos_b + c else 0
+    idx = positions[:, :, None] - jnp.arange(Lmax)[None, None, :]  # (B,C,L)
+    hm = jnp.take(h_full, jnp.clip(idx, 0), axis=1)       # (M, B, C, Lmax)
+    hr = jnp.where((idx >= 0)[None], hm, 0.0)
+    hr = jnp.repeat(hr, D // M, axis=0)                   # (D, B, C, Lmax)
+    y = jnp.einsum("bld,dbcl->bcd", kv_cache, hr.astype(kv_cache.dtype))
+    y = y.astype(jnp.float32) + jnp.repeat(h0, D // M) * kvc.astype(jnp.float32)
+    out = (q.astype(jnp.float32) * y).astype(x.dtype)
+    new_cache = {"conv": new_tail, "kv": kv_cache}
+    return new_cache, jnp.einsum("bse,ed->bsd", out,
+                                 params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Chunked (resumable) prefill: one fixed-size chunk of the prompt at a time
 # ---------------------------------------------------------------------------
 def hyena_prefill_chunk(params, cache, x, start, chunk_len, cfg, filters,

@@ -464,7 +464,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCT
     if conv_filters is not None:
         xs = xs + (conv_filters["groups"],)
     x, new_group_caches = jax.lax.scan(body, x, xs,
-                                       unroll=flags.scan_unroll(n_g))
+                                       unroll=flags.decode_unroll(n_g))
     new_cache = {"groups": new_group_caches, "pos": pos + 1}
     if n_rem:
         rem_filters = (conv_filters or {}).get("rem", {})
@@ -480,6 +480,300 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, ctx: ShardCtx = NOCT
     logits = unembed(params["embed"], x, cfg.tie_embeddings,
                      softcap=cfg.logit_softcap, ctx=ctx)
     return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Multi-token decode on the decode cache (speculative verify / replay)
+#
+# decode_chunk consumes up to C tokens per slot in ONE executable, returning
+# logits at every position — the verify half of self-speculative decoding.
+# Per-row `active_len` masks the advance: row b's states, conv tails, kv/ring
+# buffers and position move by exactly active_len[b] tokens, positions past
+# that are identity. Together with snapshot_cache_slots/restore_cache_slots
+# this gives the rollback protocol: snapshot -> verify C tokens -> accept n
+# -> restore -> replay with active_len = n.
+# ---------------------------------------------------------------------------
+def _decode_chunk_block(bp, bc, kind: str, x, pos, active_len,
+                        cfg: ModelConfig, ctx: ShardCtx, conv_filters=None,
+                        collect_states: bool = False):
+    h = apply_norm(bp["norm1"], x, cfg.norm)
+    window = cfg.window if kind == LOCAL_ATTN else 0
+    aux = {}
+    if kind in (ATTN, LOCAL_ATTN):
+        kv = {k: bc[k] for k in ("k", "v", "slot_pos") if k in bc}
+        kv, y = attn_mod.attention_decode_chunk(bp["mix"], kv, h, pos,
+                                                active_len, cfg,
+                                                window=window, ctx=ctx)
+        bc = dict(bc, **kv)
+    elif kind == HYENA:
+        if "kv" in bc:            # Lemma-2.1 cached-conv baseline
+            sub = {k: bc[k] for k in ("conv", "kv")}
+            if conv_filters is None:
+                conv_filters = hyena_mod.materialize_filters(
+                    bp["mix"]["filter"], bc["kv"].shape[1], cfg.hyena)
+            sub, y = hyena_mod.hyena_decode_cached_conv_chunk(
+                bp["mix"], sub, h, pos, active_len, cfg, conv_filters,
+                ctx=ctx)
+        else:                     # distilled modal recurrence
+            sub = {k: bc[k] for k in ("conv", "x_re", "x_im")}
+            if collect_states:
+                sub, y, aux = hyena_mod.hyena_decode_chunk(
+                    bp["mix"], sub, h, active_len, cfg, ctx=ctx,
+                    return_states=True)
+            else:
+                sub, y = hyena_mod.hyena_decode_chunk(bp["mix"], sub, h,
+                                                      active_len, cfg,
+                                                      ctx=ctx)
+        bc = dict(bc, **sub)
+    elif kind == MAMBA2:
+        sub = {k: bc[k] for k in ("conv", "ssm")}
+        sub, y = ssm_mod.mamba2_decode_chunk(bp["mix"], sub, h, active_len,
+                                             cfg, ctx=ctx)
+        bc = dict(bc, **sub)
+    elif kind == RGLRU:
+        sub = {k: bc[k] for k in ("conv", "h")}
+        sub, y = ssm_mod.rglru_decode_chunk(bp["mix"], sub, h, active_len,
+                                            cfg, ctx=ctx)
+        bc = dict(bc, **sub)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if cfg.d_ff > 0:
+        h = apply_norm(bp["norm2"], x, cfg.norm)
+        if cfg.mlp_kind == MLP_MOE:
+            y, _ = moe_mod.moe_block(bp["mlp"], h, cfg.moe, ctx=ctx)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg.act, ctx=ctx)
+        x = x + y
+    if collect_states:
+        return bc, x, aux
+    return bc, x
+
+
+def supports_state_select(cfg: ModelConfig, cache_kind: str = "native") -> bool:
+    """True when decode_chunk(collect_states=True) can provide an O(1)
+    selection-commit for this arch: every block is a distilled (native)
+    Hyena layer, whose per-position modal states + conv windows identify the
+    committed state at ANY accepted prefix length without a replay pass."""
+    return (cfg.hyena is not None and cache_kind == "native"
+            and not cfg.enc_dec and cfg.frontend == "none"
+            and all(b == HYENA for b in cfg.blocks))
+
+
+def decode_chunk(params, cache, tokens, cfg: ModelConfig, *, active_len,
+                 ctx: ShardCtx = NOCTX, conv_filters=None,
+                 need_logits: bool = True, collect_states: bool = False):
+    """Multi-token decode step. tokens: (B, C) int32; cache must be a
+    per-slot pool (pos (B,)); active_len (B,) in [0, C]. Returns
+    (cache, logits (B, C, V)) — logits at EVERY chunk position (the
+    speculative verifier needs them all; positions past a row's active_len
+    yield garbage the caller masks). cache["pos"] advances by active_len.
+    need_logits=False skips the final norm + unembed (the speculative
+    commit replay only needs the state advance) and returns (cache, None).
+    collect_states=True (requires `supports_state_select`) additionally
+    returns a per-layer aux of per-position states for
+    `commit_cache_from_states`: (cache, logits, aux)."""
+    if cfg.enc_dec or cfg.frontend != "none":
+        raise ValueError("decode_chunk does not support enc-dec/frontend "
+                         "architectures")
+    B, C = tokens.shape
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    if pos.ndim != 1:
+        raise ValueError("decode_chunk requires a per-slot cache "
+                         "(init_cache(per_slot=True))")
+    if collect_states and not supports_state_select(cfg):
+        raise ValueError("collect_states requires a pure distilled-Hyena "
+                         "arch (see supports_state_select)")
+    active_len = jnp.asarray(active_len, jnp.int32)
+    x = embed_tokens(params["embed"], tokens, ctx=ctx, dtype=dtype)
+    if cfg.rope_theta <= 0.0:                    # learned absolute positions
+        pe = params["embed"]["pos"]
+        positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        x = x + jnp.take(pe, jnp.clip(positions, 0, pe.shape[0] - 1),
+                         axis=0).astype(dtype)
+    n_groups, n_rem = layer_layout(cfg)
+
+    def body(x, gp_gc):
+        gp, gc = gp_gc[0], gp_gc[1]
+        gf = gp_gc[2] if len(gp_gc) > 2 else {}
+        auxes = {}
+        for i, kind in enumerate(cfg.pattern):
+            out = _decode_chunk_block(gp[f"l{i}"], gc[f"l{i}"], kind, x, pos,
+                                      active_len, cfg, ctx,
+                                      conv_filters=gf.get(f"l{i}"),
+                                      collect_states=collect_states)
+            if collect_states:
+                gc[f"l{i}"], x, auxes[f"l{i}"] = out
+            else:
+                gc[f"l{i}"], x = out
+        return x, (gc, auxes)
+
+    from repro import flags
+    n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+    xs = (params["groups"], cache["groups"])
+    if conv_filters is not None:
+        xs = xs + (conv_filters["groups"],)
+    x, (new_group_caches, group_aux) = jax.lax.scan(
+        body, x, xs, unroll=flags.decode_unroll(n_g))
+    new_cache = {"groups": new_group_caches, "pos": pos + active_len}
+    aux = {"groups": group_aux, "pos": pos}
+    if n_rem:
+        rem_filters = (conv_filters or {}).get("rem", {})
+        rem = []
+        rem_aux = []
+        for i in range(n_rem):
+            kind = cfg.blocks[n_groups * len(cfg.pattern) + i]
+            out = _decode_chunk_block(params["rem"][i], cache["rem"][i],
+                                      kind, x, pos, active_len, cfg, ctx,
+                                      conv_filters=rem_filters.get(i),
+                                      collect_states=collect_states)
+            if collect_states:
+                bc, x, a = out
+                rem_aux.append(a)
+            else:
+                bc, x = out
+            rem.append(bc)
+        new_cache["rem"] = rem
+        aux["rem"] = rem_aux
+    if not need_logits:
+        return new_cache, None
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed(params["embed"], x, cfg.tie_embeddings,
+                     softcap=cfg.logit_softcap, ctx=ctx)
+    if collect_states:
+        return new_cache, logits, aux
+    return new_cache, logits
+
+
+def commit_cache_from_states(aux, n_emit, cfg: ModelConfig):
+    """Build the committed decode cache directly from a
+    decode_chunk(collect_states=True) aux: per slot, select the modal state
+    after exactly n_emit tokens and gather the conv tail ending there — an
+    O(1) rollback-to-accepted-prefix with NO replay pass. Only valid for
+    `supports_state_select` archs (pure distilled Hyena)."""
+    from repro.models.layers import conv_tail_gather
+    n_emit = jnp.asarray(n_emit, jnp.int32)
+    w = cfg.hyena.short_conv - 1
+
+    def sel_states(xs, seq_axis: int):
+        # xs (..., B, C, D, d): state after j+1 tokens at index j
+        idx = jnp.broadcast_to(
+            (n_emit - 1).reshape((1,) * (seq_axis - 1) + (-1, 1, 1, 1)),
+            xs.shape[:seq_axis] + (1,) + xs.shape[seq_axis + 1:])
+        return jnp.take_along_axis(xs, idx, axis=seq_axis)[
+            (slice(None),) * seq_axis + (0,)]
+
+    def fix(a, seq_axis: int):
+        ext = a["ext"]                           # (..., B, W-1+C, 3D)
+        if seq_axis == 2:                        # leading group axis
+            tail = jax.vmap(lambda e: conv_tail_gather(e, w, w + n_emit))(ext)
+        else:
+            tail = conv_tail_gather(ext, w, w + n_emit)
+        return {"conv": tail,
+                "x_re": sel_states(a["xs_re"], seq_axis),
+                "x_im": sel_states(a["xs_im"], seq_axis)}
+
+    out = {"groups": {lk: fix(lv, seq_axis=2)
+                      for lk, lv in aux["groups"].items()},
+           "pos": jnp.asarray(aux["pos"], jnp.int32) + n_emit}
+    if aux.get("rem"):
+        out["rem"] = [fix(a, seq_axis=1) for a in aux["rem"]]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore: the rollback half of speculative decoding
+# ---------------------------------------------------------------------------
+def _chunk_write_idx(pos, horizon: int, size: int, ring: bool):
+    """(B, horizon) buffer indices a horizon-token advance writes per slot —
+    the same index math attention_decode_chunk / the cached-conv chunk use."""
+    offs = pos[:, None] + jnp.arange(horizon, dtype=jnp.int32)[None, :]
+    return offs % size if ring else jnp.clip(offs, 0, size - 1)
+
+
+def _gather_rows(leaf, idx, seq_axis: int):
+    """Gather rows idx (B, C) along seq_axis; batch axis is seq_axis - 1."""
+    B, C = idx.shape
+    shape = [1] * leaf.ndim
+    shape[seq_axis - 1] = B
+    shape[seq_axis] = C
+    tgt = leaf.shape[:seq_axis] + (C,) + leaf.shape[seq_axis + 1:]
+    return jnp.take_along_axis(leaf, jnp.broadcast_to(idx.reshape(shape), tgt),
+                               axis=seq_axis)
+
+
+def _scatter_rows(leaf, idx, rows, seq_axis: int):
+    b = jnp.arange(idx.shape[0])[:, None]                 # (B, 1) vs (B, C)
+    rows = rows.astype(leaf.dtype)
+    if seq_axis == 1:
+        return leaf.at[b, idx].set(rows)
+    assert seq_axis == 2, seq_axis
+    return leaf.at[:, b, idx].set(rows)
+
+
+_SEQ_KEYS = ("k", "v", "kv", "slot_pos")
+
+
+def snapshot_cache_slots(cache, cfg: ModelConfig, horizon: int):
+    """Capture everything a <= horizon-token advance (decode_step calls or
+    one decode_chunk) can mutate, per slot: recurrent states and conv tails
+    in full (they are O(1) per slot), plus the `horizon` rows of every
+    sequence buffer (attention k/v linear or ring — slot_pos included — and
+    cached-conv k.v products) at the write indices derived from the CURRENT
+    cache["pos"]. restore_cache_slots with this snapshot is a bit-exact
+    rollback to the snapshot point."""
+    pos = jnp.asarray(cache["pos"], jnp.int32)
+    if pos.ndim != 1:
+        raise ValueError("snapshot_cache_slots requires a per-slot cache")
+
+    def snap_block(c, seq_axis: int):
+        out = {}
+        ring = "slot_pos" in c
+        for k, v in c.items():
+            if k in ("cross_k", "cross_v"):
+                continue                        # decode never mutates these
+            if k in _SEQ_KEYS:
+                idx = _chunk_write_idx(pos, horizon, v.shape[seq_axis], ring)
+                out[k] = _gather_rows(v, idx, seq_axis)
+            else:                               # conv / x_re / x_im / ssm / h
+                out[k] = v
+        return out
+
+    snap = {"pos": pos,
+            "groups": {lk: snap_block(lv, seq_axis=2)
+                       for lk, lv in cache["groups"].items()}}
+    if "rem" in cache:
+        snap["rem"] = [snap_block(rc, seq_axis=1) for rc in cache["rem"]]
+    return snap
+
+
+def restore_cache_slots(cache, snap, cfg: ModelConfig):
+    """Bit-exact rollback of a per-slot cache to a snapshot taken by
+    snapshot_cache_slots: scatter the saved sequence-buffer rows back (ring
+    slot_pos positions included), swap the saved recurrent states / conv
+    tails in wholesale, and reset pos to the snapshot position."""
+    pos = jnp.asarray(snap["pos"], jnp.int32)
+
+    def rest_block(c, s, seq_axis: int):
+        out = dict(c)
+        ring = "slot_pos" in c
+        for k, v in s.items():
+            if k in _SEQ_KEYS:
+                idx = _chunk_write_idx(pos, v.shape[seq_axis],
+                                       c[k].shape[seq_axis], ring)
+                out[k] = _scatter_rows(c[k], idx, v, seq_axis)
+            else:
+                out[k] = v
+        return out
+
+    out = {"groups": {lk: rest_block(lv, snap["groups"][lk], seq_axis=2)
+                      for lk, lv in cache["groups"].items()},
+           "pos": pos}
+    if "rem" in cache:
+        out["rem"] = [rest_block(rc, snap["rem"][i], seq_axis=1)
+                      for i, rc in enumerate(cache["rem"])]
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -196,6 +196,69 @@ def mamba2_decode(params, cache, x, cfg, *, ctx: ShardCtx = NOCTX):
     return {"conv": conv_cache, "ssm": h}, out[:, None, :]
 
 
+def mamba2_decode_chunk(params, cache, x, active_len, cfg, *,
+                        ctx: ShardCtx = NOCTX):
+    """Multi-token decode on the decode cache (speculative verify / replay).
+    x: (B, C, D); active_len (B,) — positions past a row's active_len get
+    dt = 0 (identity transition, zero input) so its conv tail and SSM state
+    advance by exactly active_len tokens. Runs the chunk path through
+    `ssd_chunked(initial_state=cache["ssm"])`."""
+    from repro.models.hyena import _short_conv_rows
+    Bsz, C, D = x.shape
+    s = cfg.ssm
+    active_len = jnp.asarray(active_len, jnp.int32)
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xBC, dt, di, H, G, N = _split_mamba_proj(proj, cfg)
+    new_tail, xBC, _ = _short_conv_rows(params["conv"], cache["conv"], xBC,
+                                        active_len)
+    xBC = jax.nn.silu(xBC)
+    xs, B_, C_ = jnp.split(xBC, [di, di + G * N], axis=-1)
+    B_ = B_.reshape(Bsz, C, G, N)
+    C_ = C_.reshape(Bsz, C, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    dt = jnp.where(jnp.arange(C)[None, :, None] < active_len[:, None, None],
+                   dt, 0.0)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(Bsz, C, H, s.head_dim).astype(jnp.float32)
+    y, state = ssd_chunked(xh * dt[..., None], dt * A, B_.astype(jnp.float32),
+                           C_.astype(jnp.float32), C,
+                           initial_state=cache["ssm"])
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(Bsz, C, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) *
+         params["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    return {"conv": new_tail.astype(jnp.float32),
+            "ssm": state.astype(jnp.float32)}, out
+
+
+def rglru_decode_chunk(params, cache, x, active_len, cfg, *,
+                       ctx: ShardCtx = NOCTX):
+    """Multi-token RG-LRU decode on the decode cache. Positions past a row's
+    active_len become identity transitions (a = 1, input 0), so h[:, -1] is
+    the state after exactly active_len tokens."""
+    from repro.models.hyena import _short_conv_rows
+    C = x.shape[1]
+    active_len = jnp.asarray(active_len, jnp.int32)
+    xb = jnp.einsum("bsd,de->bse", x, params["wx"].astype(x.dtype))
+    yb = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["wy"].astype(x.dtype)))
+    new_tail, xc, _ = _short_conv_rows(params["conv"], cache["conv"], xb,
+                                       active_len)
+    log_a, gated = _rglru_gates(params, xc)
+    valid = (jnp.arange(C)[None, :, None] < active_len[:, None, None])
+    log_a = jnp.where(valid, log_a, 0.0)
+    gated = jnp.where(valid, gated, 0.0)
+    a = jnp.exp(log_a)
+    a_cum, h = jax.lax.associative_scan(_rglru_combine, (a, gated), axis=1)
+    h = h + a_cum * cache["h"][:, None, :]
+    out = h.astype(x.dtype) * yb
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    return {"conv": new_tail.astype(jnp.float32),
+            "h": h[:, -1, :].astype(jnp.float32)}, out
+
+
 def mamba2_prefill_chunk(params, cache, x, chunk_len, cfg, *,
                          ctx: ShardCtx = NOCTX):
     """Consume one prompt chunk x (B, C, D) resuming from cache{conv, ssm}.

@@ -67,3 +67,20 @@ def jit_cache_size(fn) -> Optional[int]:
         return int(fn._cache_size())
     except Exception:
         return None
+
+
+def speculative_summary(stats, spec_k: int) -> dict:
+    """Acceptance-rate report from an engine's `stats` dict: drafted vs
+    accepted counts, the acceptance rate, and the mean emitted tokens per
+    (round, slot) — accepted drafts + 1 correction token."""
+    drafted = int(stats.get("spec_drafted", 0))
+    accepted = int(stats.get("spec_accepted", 0))
+    slot_rounds = drafted / spec_k if spec_k else 0.0
+    return {
+        "spec_rounds": int(stats.get("spec_rounds", 0)),
+        "spec_drafted": drafted,
+        "spec_accepted": accepted,
+        "acceptance_rate": accepted / drafted if drafted else float("nan"),
+        "tokens_per_slot_round": (accepted / slot_rounds + 1.0
+                                  if slot_rounds else float("nan")),
+    }

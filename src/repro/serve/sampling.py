@@ -4,6 +4,15 @@
 request replicated, or homogeneous batches). `sample_token_slots` takes
 per-row (B,) parameter vectors — the continuous-batching engine serves
 requests with heterogeneous sampling params in one batched step.
+
+PRNG key streams: `sample_token_slots` accepts either one key (2,) that is
+split across rows (legacy behavior), or per-row keys (B, 2). The serving
+engine derives per-row keys from a per-(slot, token-index) key tree (see
+serve/README.md "Key tree") so the speculative and non-speculative decode
+paths consume identical key streams per emitted-token position — that is
+what `filter_logits` is factored out for: the speculative verifier applies
+the exact same temperature/top-k/top-p filtering to target and draft
+distributions before rejection sampling.
 """
 from __future__ import annotations
 
@@ -25,19 +34,20 @@ def sample_token(key, logits, *, temperature: float = 1.0, top_k: int = 0,
         top_p=jnp.full((B,), top_p, jnp.float32))
 
 
-def sample_token_slots(key, logits, *, temperature, top_k, top_p):
-    """Per-slot sampling. logits: (B, V); temperature/top_k/top_p: (B,).
+def filter_logits(logits, *, temperature, top_k, top_p):
+    """Temperature-scaled + top-k/top-p-filtered logits.
 
-    Rows with temperature <= 0 are greedy; top_k <= 0 / top_p >= 1 disable
-    the respective filter for that row. Each row draws from its own PRNG
-    stream (split of `key`) so one slot's draw never perturbs another's.
+    logits: (B, V); temperature/top_k/top_p: (B,). Returns (B, V) float32
+    with -inf outside each row's sampling support — softmax of the result is
+    the exact distribution `sample_token_slots` draws from (rows with
+    temperature <= 0 are greedy there and ignore this). Shared by the
+    per-slot sampler and the speculative-decoding verifier so the rejection
+    test compares the same filtered distributions the sampler uses.
     """
     B, V = logits.shape
     temperature = jnp.asarray(temperature, jnp.float32)
     top_k = jnp.asarray(top_k, jnp.int32)
     top_p = jnp.asarray(top_p, jnp.float32)
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
     lg = logits.astype(jnp.float32) / jnp.clip(temperature, 1e-6)[:, None]
     # per-row top-k: the k-th largest value is the row's cutoff (k<=0 -> V)
     k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V)
@@ -52,7 +62,31 @@ def sample_token_slots(key, logits, *, temperature, top_k, top_p):
     cutoff = jnp.take_along_axis(srt2, jnp.clip(cutoff_idx, 0, V - 1)[:, None],
                                  axis=-1)
     lg = jnp.where((top_p[:, None] < 1.0) & (lg < cutoff), -jnp.inf, lg)
+    return lg
 
-    keys = jax.random.split(key, B)
-    sampled = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
-    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+def sample_token_slots(key, logits, *, temperature, top_k, top_p):
+    """Per-slot sampling. logits: (B, V); temperature/top_k/top_p: (B,).
+
+    Rows with temperature <= 0 are greedy; top_k <= 0 / top_p >= 1 disable
+    the respective filter for that row. `key` is either a single PRNG key
+    (2,) split across rows, or per-row keys (B, 2) — the serving engine
+    passes per-row keys from its per-(slot, token-index) key tree so one
+    slot's draw never perturbs another's and the speculative path can replay
+    the identical stream.
+    """
+    B, V = logits.shape
+    temperature = jnp.asarray(temperature, jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def sample(_):
+        lg = filter_logits(logits, temperature=temperature, top_k=top_k,
+                           top_p=top_p)
+        keys = key if key.ndim == 2 else jax.random.split(key, B)
+        sampled = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+        return jnp.where(temperature <= 0.0, greedy, sampled)
+
+    # all-greedy fast path: skips the sort-based top-k/top-p filter (the
+    # serving hot loop calls this every tick / every draft-scan step)
+    return jax.lax.cond(jnp.all(temperature <= 0.0), lambda _: greedy,
+                        sample, None)

@@ -65,6 +65,7 @@ from repro.models.model import (init_cache, init_prefill_cache,
                                 materialize_conv_filters, reset_cache_slot,
                                 write_cache_slot, write_cache_slots)
 from repro.serve.sampling import sample_token_slots
+from repro.serve.speculative import DRAW_TAG, token_keys
 
 QUEUED, PREFILLING, RUNNING, FINISHED = ("queued", "prefilling", "running",
                                          "finished")
@@ -78,13 +79,47 @@ def _jitted(name: str, fn, **jit_kw):
     return _SLOT_JITS[name]
 
 
-def _update_slot_meta(temps, top_ks, top_ps, last, slots, t, k, p, tok):
-    """Scatter per-slot sampling params + last token for newly admitted
-    requests. Out-of-range slot indices (dummy admission rows) are dropped."""
+def _update_slot_meta(temps, top_ks, top_ps, last, keys, tok_idx, spec_len,
+                      slots, t, k, p, tok, kv, ti, sl):
+    """Scatter per-slot sampling params, request PRNG keys, stream counters
+    and speculation windows + last token for newly admitted requests.
+    Out-of-range slot indices (dummy admission rows) are dropped."""
     md = "drop"
     return (temps.at[slots].set(t, mode=md), top_ks.at[slots].set(k, mode=md),
             top_ps.at[slots].set(p, mode=md),
-            last.at[slots].set(tok, mode=md))
+            last.at[slots].set(tok, mode=md),
+            keys.at[slots].set(kv, mode=md),
+            tok_idx.at[slots].set(ti, mode=md),
+            spec_len.at[slots].set(sl, mode=md))
+
+
+def _admit_sample(keyvec, logits, t, k, p):
+    """First-token draw at admission: stream index 0 of each request's key
+    tree (identical to what the decode loop would have drawn)."""
+    keys = token_keys(keyvec, jnp.zeros((keyvec.shape[0],), jnp.int32),
+                      DRAW_TAG)
+    return sample_token_slots(keys, logits, temperature=t, top_k=k, top_p=p)
+
+
+def _stream_sample(slot_keys, tok_idx, logits, temps, top_ks, top_ps):
+    """Non-speculative decode draw: per-slot DRAW_TAG key at each slot's own
+    stream index — the same key tree the speculative path consumes."""
+    keys = token_keys(slot_keys, tok_idx, DRAW_TAG)
+    toks = sample_token_slots(keys, logits, temperature=temps, top_k=top_ks,
+                              top_p=top_ps)
+    return toks, tok_idx + 1
+
+
+def _clear_slot_meta(temps, top_ks, top_ps, spec_len, slot):
+    """Reset a freed slot's sampling params and speculation window to the
+    neutral values (greedy, window 1). Stale values on dead slots would
+    otherwise defeat the all-greedy and all-fully-accepted fast paths (the
+    fused executables branch on jnp.all over EVERY row, dead or alive)."""
+    md = "drop"
+    return (temps.at[slot].set(0.0, mode=md),
+            top_ks.at[slot].set(0, mode=md),
+            top_ps.at[slot].set(1.0, mode=md),
+            spec_len.at[slot].set(1, mode=md))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +139,7 @@ class Request:
     max_new_tokens: int
     sampling: SamplingParams = GREEDY
     eos_id: Optional[int] = None
+    spec: bool = True                        # opt out of speculative decode
     # --- filled by the engine ---
     tokens: List[int] = dataclasses.field(default_factory=list)
     status: str = QUEUED
@@ -142,6 +178,14 @@ class ContinuousBatchingEngine:
         chunked prefill, one chunk per tick (None disables).
       * overlap        — async host loop: enqueue the next pooled decode
         before fetching the previous tick's tokens.
+      * spec_k         — self-speculative decoding: each tick drafts spec_k
+        tokens per slot with a low-order modal truncation of the serving SSM
+        (one fused K-step executable) and verifies them all in ONE
+        multi-token step of the full-fidelity model, committing the longest
+        accepted prefix + a correction token (serve/speculative.py).
+        `draft_order` sets the draft's real state dim (default: half the
+        serving order); `draft_model=(params, cfg)` overrides the draft
+        entirely (testing). Requests can opt out per-request (Request.spec).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
@@ -150,6 +194,8 @@ class ContinuousBatchingEngine:
                  max_prefills_per_step: int = 1, reset_on_evict: bool = False,
                  bucket_prompts: bool = True, min_bucket: int = 8,
                  prefill_chunk: Optional[int] = None, overlap: bool = True,
+                 spec_k: int = 0, draft_order: Optional[int] = None,
+                 draft_model: Optional[Tuple[Any, ModelConfig]] = None,
                  clock: Callable[[], float] = time.monotonic):
         if mode not in ("distilled", "cached_conv"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -179,7 +225,6 @@ class ContinuousBatchingEngine:
         self._overlap = overlap
         self._prefill_batch = max(1, max_prefills_per_step)
         self._clock = clock
-        self._key = jax.random.PRNGKey(seed)
         cache_kind = "conv" if mode == "cached_conv" else "native"
         self._cache_kind = cache_kind
         self.cache, _ = unzip(init_cache(cfg, n_slots, max_len,
@@ -195,7 +240,6 @@ class ContinuousBatchingEngine:
                                     donate_argnums=(0,))
         self._reset_slot = _jitted("reset", reset_cache_slot,
                                    donate_argnums=(0,))
-        self._sample = _jitted("sample", sample_token_slots)
         self._meta = _jitted("slot_meta", _update_slot_meta)
         # long filters: cached-conv decode always needs them; chunked prefill
         # needs them for any Hyena layer in either mode
@@ -212,23 +256,75 @@ class ContinuousBatchingEngine:
                                if prefill_chunk else None)
         self._finalize = (jitted_finalize_prefill(cfg, max_len, cache_kind)
                           if prefill_chunk else None)
-        # per-slot host-side bookkeeping; sampling params + last token live
-        # on device so the overlapped loop never waits on a host upload
+        # --- self-speculative decoding (serve/speculative.py) ---
+        self._spec_k = int(spec_k)
+        self._spec = self._spec_k > 0
+        self.draft_cache = None
+        # native (distilled) serving: the draft's truncated modes are a
+        # subset of the serving state, so the draft reads the serving cache
+        # directly (embedded residues) — no second pool, no draft prefill.
+        # cached-conv serving keeps a separate native draft pool: that is
+        # the paper's classic pair (exact Lemma-2.1 target, O(d) draft).
+        self._draft_shared = cache_kind == "native"
+        if self._spec:
+            from repro.serve import speculative as spec_mod
+            spec_mod.validate_spec_config(cfg, self._spec_k)
+            d_ord = (draft_order if draft_order is not None else
+                     (cfg.hyena.distill_order // 2 if cfg.hyena else 0))
+            self.draft_order = d_ord
+            if draft_model is not None:
+                self._draft_params, self._draft_cfg = draft_model
+                if self._draft_shared and self._draft_cfg is not cfg \
+                        and self._draft_cfg != cfg:
+                    raise ValueError("shared-state draft requires the draft "
+                                     "cfg to match the serving cfg")
+            else:
+                self._draft_params, self._draft_cfg = \
+                    spec_mod.make_draft_params(params, cfg, d_ord,
+                                               fit_len=min(max_len, 2048),
+                                               embed=self._draft_shared)
+            self._spec_round = spec_mod.jitted_spec_round(
+                cfg, self._draft_cfg, self._spec_k, self._draft_shared, ctx)
+            if not self._draft_shared:
+                self.draft_cache, _ = unzip(
+                    init_cache(self._draft_cfg, n_slots, max_len,
+                               cache_kind="native", per_slot=True))
+                self._draft_prefill = jitted_prefill(self._draft_cfg,
+                                                     max_len, "native", ctx)
+                if prefill_chunk:
+                    self._draft_prefill_chunk = jitted_prefill_chunk(
+                        self._draft_cfg, max_len, "native", ctx)
+                    self._draft_finalize = jitted_finalize_prefill(
+                        self._draft_cfg, max_len, "native")
+        # per-slot host-side bookkeeping; sampling params, last token, PRNG
+        # keys, stream counters and speculation windows live on device so the
+        # overlapped loop never waits on a host upload
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.active = np.zeros(n_slots, bool)
         self._temps = jnp.zeros((n_slots,), jnp.float32)
         self._top_ks = jnp.zeros((n_slots,), jnp.int32)
         self._top_ps = jnp.ones((n_slots,), jnp.float32)
         self._last = jnp.zeros((n_slots,), jnp.int32)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._slot_keys = jnp.zeros((n_slots,) + self._base_key.shape,
+                                    self._base_key.dtype)
+        self._tok_idx = jnp.zeros((n_slots,), jnp.int32)
+        self._spec_len = jnp.ones((n_slots,), jnp.int32)
+        self._admit_sample = _jitted("admit_sample", _admit_sample)
+        self._stream_sample = _jitted("stream_sample", _stream_sample)
+        self._clear_meta = _jitted("clear_slot_meta", _clear_slot_meta)
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
-        self._pending: Optional[Tuple[list, jnp.ndarray]] = None
+        self._pending: Optional[Tuple[list, Any, Any]] = None
         self._chunk_state: Optional[Dict[str, Any]] = None
         self._buckets_used: set = set()
         self._next_rid = 0
+        self.t_admit = 0.0                    # host seconds spent admitting
         self.stats: Dict[str, int] = {"admitted": 0, "evicted": 0,
                                       "decode_steps": 0, "prefills": 0,
-                                      "prefill_calls": 0, "chunk_steps": 0}
+                                      "prefill_calls": 0, "chunk_steps": 0,
+                                      "spec_rounds": 0, "spec_drafted": 0,
+                                      "spec_accepted": 0}
 
     # ------------------------------------------------------------------
     # request intake
@@ -292,10 +388,6 @@ class ContinuousBatchingEngine:
                 return b
         return None
 
-    def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
-
     def _bucket_of(self, L: int) -> int:
         b = max(self._min_bucket, 1 << max(L - 1, 0).bit_length())
         return min(b, self.max_len)
@@ -305,19 +397,29 @@ class ContinuousBatchingEngine:
 
     def step(self) -> int:
         """One scheduler tick. Overlapped: (1) enqueue the next pooled decode
-        from device-resident state, (2) retire the PREVIOUS tick's sampled
-        tokens to host (append / EOS / eviction), (3) admit queued requests
-        into freed slots — so host bookkeeping and prefills overlap the
-        in-flight decode. Synchronous (`overlap=False`): admit, then decode
-        and retire in the same tick (the original loop). Returns the number
-        of tokens appended to requests during this call."""
+        (or speculative draft+verify round) from device-resident state,
+        (2) retire the PREVIOUS tick's sampled tokens to host (append / EOS /
+        eviction), (3) admit queued requests into freed slots — so host
+        bookkeeping and prefills overlap the in-flight decode. Synchronous
+        (`overlap=False`): admit, then decode and retire in the same tick
+        (the original loop). Returns the number of tokens appended to
+        requests during this call."""
+        dispatch = self._dispatch_spec if self._spec else self._dispatch_decode
         prev, self._pending = self._pending, None
         if self._overlap and self.n_active > 0:
-            self._pending = self._dispatch_decode()
+            self._pending = dispatch()
         emitted = self._retire(prev)
+        t0 = self._clock()
+        work0 = self.stats["prefill_calls"] + self.stats["chunk_steps"]
         emitted += self._admit_phase()
+        if self.stats["prefill_calls"] + self.stats["chunk_steps"] > work0:
+            # only admission phases that actually prefilled count toward
+            # t_admit; note that with the overlapped loop part of this host
+            # time still shadows an in-flight device decode, so the derived
+            # decode_tok_per_s is an upper bound on pure-decode throughput
+            self.t_admit += self._clock() - t0
         if not self._overlap and self.n_active > 0:
-            emitted += self._retire(self._dispatch_decode())
+            emitted += self._retire(dispatch())
         return emitted
 
     def run(self) -> List[Request]:
@@ -334,6 +436,17 @@ class ContinuousBatchingEngine:
         slots advance one (ignored) decode position."""
         lens = sorted({int(x) for x in prompt_lens})
         direct = [L for L in lens if not self._use_chunked(L)]
+        # host-side request-key derivation (fold_in + stack at admission)
+        # compiles tiny executables on first use — warm them here (at every
+        # admission-batch width) so the steady state stays at zero XLA
+        # compiles in a fresh process
+        rk = jax.random.fold_in(self._base_key, 0)
+        for width in {1, self._prefill_batch}:
+            jnp.stack([rk] * width)
+        # eviction-time slot-meta clear (slot n_slots = dropped no-op)
+        (self._temps, self._top_ks, self._top_ps, self._spec_len) = \
+            self._clear_meta(self._temps, self._top_ks, self._top_ps,
+                             self._spec_len, self.n_slots)
 
         def warm_admission_ops(K: int, logits) -> None:
             # first-token sampler + slot-meta scatter at admission batch size
@@ -341,11 +454,15 @@ class ContinuousBatchingEngine:
             tj = jnp.zeros((K,), jnp.float32)
             kj = jnp.zeros((K,), jnp.int32)
             pj = jnp.ones((K,), jnp.float32)
-            toks = self._sample(self._next_key(), logits, temperature=tj,
-                                top_k=kj, top_p=pj)
-            self._temps, self._top_ks, self._top_ps, self._last = self._meta(
+            keyvec = jnp.zeros((K,) + self._base_key.shape,
+                               self._base_key.dtype)
+            toks = self._admit_sample(keyvec, logits, tj, kj, pj)
+            (self._temps, self._top_ks, self._top_ps, self._last,
+             self._slot_keys, self._tok_idx, self._spec_len) = self._meta(
                 self._temps, self._top_ks, self._top_ps, self._last,
-                jnp.full((K,), self.n_slots, jnp.int32), tj, kj, pj, toks)
+                self._slot_keys, self._tok_idx, self._spec_len,
+                jnp.full((K,), self.n_slots, jnp.int32), tj, kj, pj, toks,
+                keyvec, jnp.ones((K,), jnp.int32), jnp.ones((K,), jnp.int32))
 
         if self._bucketed:
             K = self._prefill_batch
@@ -357,12 +474,22 @@ class ContinuousBatchingEngine:
                 self.cache = self._write_slots(
                     self.cache, cache1, jnp.full((K,), self.n_slots,
                                                  jnp.int32))
+                if self._spec and not self._draft_shared:
+                    dc1, _ = self._draft_prefill(
+                        self._draft_params, jnp.zeros((K, bkt), jnp.int32),
+                        lengths=jnp.full((K,), bkt, jnp.int32))
+                    self.draft_cache = self._write_slots(
+                        self.draft_cache, dc1,
+                        jnp.full((K,), self.n_slots, jnp.int32))
                 warm_admission_ops(K, logits)
                 self._buckets_used.add(bkt)
         else:
             for L in direct:
                 _, logits = self._prefill(self.params,
                                           jnp.zeros((1, L), jnp.int32))
+                if self._spec and not self._draft_shared:
+                    self._draft_prefill(self._draft_params,
+                                        jnp.zeros((1, L), jnp.int32))
                 warm_admission_ops(1, logits)
         if self._chunk is not None and any(self._use_chunked(L) for L in lens):
             pc = self._new_prefill_cache()
@@ -373,14 +500,30 @@ class ContinuousBatchingEngine:
             # write + reset slot 0 (free at warmup time) to warm both ops
             self.cache = self._write_slot(self.cache, dc, 0)
             self.cache = self._reset_slot(self.cache, 0)
+            if self._spec and not self._draft_shared:
+                dpc = self._new_draft_prefill_cache()
+                dpc, _ = self._draft_prefill_chunk(
+                    self._draft_params, dpc,
+                    jnp.zeros((1, self._chunk), jnp.int32), 0,
+                    chunk_len=self._chunk, conv_filters=self._chunk_filters)
+                ddc = self._draft_finalize(dpc, self._chunk)
+                self.draft_cache = self._write_slot(self.draft_cache, ddc, 0)
+                self.draft_cache = self._reset_slot(self.draft_cache, 0)
             warm_admission_ops(1, logits)
-        self.cache, logits = self._decode(self.params, self.cache,
-                                          self._last[:, None],
-                                          conv_filters=self._conv_filters)
-        self._sample(self._next_key(), logits[:, 0, :],
-                     temperature=self._temps, top_k=self._top_ks,
-                     top_p=self._top_ps)
-        jax.block_until_ready(self.cache)
+        if self._spec:
+            # one speculative round: fused draft scan + verify/commit
+            self._retire(self._dispatch_spec())
+            self.stats["decode_steps"] -= 1       # warmup doesn't count
+            self.stats["spec_rounds"] -= 1
+            jax.block_until_ready((self.cache, self.draft_cache))
+        else:
+            self.cache, logits = self._decode(self.params, self.cache,
+                                              self._last[:, None],
+                                              conv_filters=self._conv_filters)
+            self._stream_sample(self._slot_keys, self._tok_idx,
+                                logits[:, 0, :], self._temps, self._top_ks,
+                                self._top_ps)
+            jax.block_until_ready(self.cache)
 
     def prefill_compile_stats(self) -> Dict[str, Any]:
         """Executable counts backing the O(#buckets) claim. Note the jit memo
@@ -405,9 +548,9 @@ class ContinuousBatchingEngine:
         self.cache, logits = self._decode(self.params, self.cache,
                                           self._last[:, None],
                                           conv_filters=self._conv_filters)
-        nxt = self._sample(self._next_key(), logits[:, 0, :],
-                           temperature=self._temps, top_k=self._top_ks,
-                           top_p=self._top_ps)
+        nxt, self._tok_idx = self._stream_sample(
+            self._slot_keys, self._tok_idx, logits[:, 0, :], self._temps,
+            self._top_ks, self._top_ps)
         self._last = nxt
         self.stats["decode_steps"] += 1
         snapshot = [(int(b), self.slots[b]) for b in np.nonzero(self.active)[0]]
@@ -415,22 +558,74 @@ class ContinuousBatchingEngine:
             nxt.copy_to_host_async()           # double-buffered transfer
         except AttributeError:
             pass
-        return (snapshot, nxt)
+        return (snapshot, nxt, None)
+
+    def _dispatch_spec(self):
+        """Enqueue one speculative round — fused K-step draft scan (on the
+        serving cache itself for the shared-state draft, else on the draft
+        pool; the scan's advanced state is discarded) + multi-token verify,
+        acceptance, rollback and replay — as ONE device dispatch per up to
+        spec_k + 1 tokens per slot."""
+        (self.cache, new_draft, emitted, n_emit, last, tok_idx) = \
+            self._spec_round(self.params, self._draft_params, self.cache,
+                             self._last, self._spec_len,
+                             None if self._draft_shared else self.draft_cache,
+                             temperature=self._temps,
+                             top_k=self._top_ks, top_p=self._top_ps,
+                             slot_keys=self._slot_keys,
+                             tok_idx=self._tok_idx,
+                             conv_filters=self._conv_filters)
+        if not self._draft_shared:
+            self.draft_cache = new_draft
+        self._last, self._tok_idx = last, tok_idx
+        self.stats["decode_steps"] += 1
+        self.stats["spec_rounds"] += 1
+        snapshot = [(int(b), self.slots[b]) for b in np.nonzero(self.active)[0]]
+        try:
+            emitted.copy_to_host_async()
+            n_emit.copy_to_host_async()
+        except AttributeError:
+            pass
+        return (snapshot, emitted, n_emit)
 
     def _retire(self, pending) -> int:
         """Fetch a dispatched tick's tokens (the only host sync point on the
-        decode path) and do the EOS/eviction bookkeeping."""
+        decode path) and do the EOS/eviction bookkeeping. Speculative
+        pending records carry (emitted (B, C), n_emit (B,)): each slot
+        appends its accepted prefix + correction, stopping early on EOS /
+        max-tokens eviction (the remaining speculated tokens are dropped,
+        exactly as a non-speculative run would never have produced them)."""
         if pending is None:
             return 0
-        snapshot, nxt_dev = pending
-        nxt = np.asarray(nxt_dev)
+        snapshot, toks_dev, n_emit_dev = pending
+        toks = np.asarray(toks_dev)
+        n_emit = None if n_emit_dev is None else np.asarray(n_emit_dev)
         emitted = 0
         for b, req in snapshot:
             # slot may have been evicted (and even re-admitted) since this
             # tick was dispatched — its speculative token is dropped
-            if self.slots[b] is req and req.status == RUNNING:
-                self._append_token(b, int(nxt[b]))
+            if self.slots[b] is not req or req.status != RUNNING:
+                continue
+            if n_emit is None:
+                self._append_token(b, int(toks[b]))
                 emitted += 1
+                continue
+            n = int(n_emit[b])
+            applied = 0
+            for j in range(n):
+                self._append_token(b, int(toks[b, j]))
+                applied += 1
+                emitted += 1
+                if self.slots[b] is not req or req.status != RUNNING:
+                    break                      # evicted mid-speculation
+            if req.spec:
+                # count only DELIVERED accepted drafts: tokens truncated by
+                # an EOS/max-tokens eviction never reached the request. A
+                # full delivery ends with the correction token (applied - 1
+                # drafts); a truncated one delivered accepted drafts only.
+                self.stats["spec_drafted"] += self._spec_k
+                self.stats["spec_accepted"] += (applied - 1 if applied == n
+                                                else applied)
         return emitted
 
     # ------------------------------------------------------------------
@@ -497,6 +692,10 @@ class ContinuousBatchingEngine:
             prompt = jnp.asarray(reqs[0].prompt, jnp.int32)[None]
             cache1, logits = self._prefill(self.params, prompt)
             self.cache = self._write_slot(self.cache, cache1, slots[0])
+            if self._spec and not self._draft_shared:
+                dc1, _ = self._draft_prefill(self._draft_params, prompt)
+                self.draft_cache = self._write_slot(self.draft_cache, dc1,
+                                                    slots[0])
         else:
             K = self._prefill_batch
             toks = np.zeros((K, bucket), np.int32)
@@ -510,6 +709,12 @@ class ContinuousBatchingEngine:
                                            lengths=jnp.asarray(lens))
             self.cache = self._write_slots(self.cache, cache1,
                                            jnp.asarray(slot_idx))
+            if self._spec and not self._draft_shared:
+                dc1, _ = self._draft_prefill(self._draft_params,
+                                             jnp.asarray(toks),
+                                             lengths=jnp.asarray(lens))
+                self.draft_cache = self._write_slots(self.draft_cache, dc1,
+                                                     jnp.asarray(slot_idx))
             self._buckets_used.add(bucket)
         self.stats["prefills"] += len(reqs)
         self.stats["prefill_calls"] += 1
@@ -518,23 +723,34 @@ class ContinuousBatchingEngine:
     def _register_admissions(self, reqs: List[Request], slots: List[int],
                              logits) -> int:
         """Sample first tokens from prefill logits (rows 0..len(reqs)-1 are
-        the real requests), push sampling params + last tokens to the device
-        slot vectors, and flip host bookkeeping to RUNNING."""
+        the real requests) with each request's OWN stream-index-0 key, push
+        sampling params + PRNG keys + stream counters + last tokens to the
+        device slot vectors, and flip host bookkeeping to RUNNING."""
         K = logits.shape[0]
         t = np.zeros(K, np.float32)
         k = np.zeros(K, np.int32)
         p = np.ones(K, np.float32)
         sl = np.full(K, self.n_slots, np.int32)
+        slen = np.ones(K, np.int32)
         for j, (req, slot) in enumerate(zip(reqs, slots)):
             sp = req.sampling
             t[j], k[j], p[j] = sp.temperature, sp.top_k, sp.top_p
             sl[j] = slot
+            slen[j] = (self._spec_k + 1 if (self._spec and req.spec) else 1)
+        # per-request key tree roots: fold_in(engine_key, rid) — path- and
+        # admission-order-independent, so spec and non-spec runs of the same
+        # request set consume identical key streams (see serve/README.md)
+        rk = [jax.random.fold_in(self._base_key, req.rid) for req in reqs]
+        rk += [self._base_key] * (K - len(reqs))        # dummy rows: dropped
+        keyvec = jnp.stack(rk)
         tj, kj, pj = jnp.asarray(t), jnp.asarray(k), jnp.asarray(p)
-        toks = self._sample(self._next_key(), logits, temperature=tj,
-                            top_k=kj, top_p=pj)
-        self._temps, self._top_ks, self._top_ps, self._last = self._meta(
+        toks = self._admit_sample(keyvec, logits, tj, kj, pj)
+        (self._temps, self._top_ks, self._top_ps, self._last,
+         self._slot_keys, self._tok_idx, self._spec_len) = self._meta(
             self._temps, self._top_ks, self._top_ps, self._last,
-            jnp.asarray(sl), tj, kj, pj, toks)
+            self._slot_keys, self._tok_idx, self._spec_len,
+            jnp.asarray(sl), tj, kj, pj, toks, keyvec,
+            jnp.ones((K,), jnp.int32), jnp.asarray(slen))
         toks_h = np.asarray(toks)
         now = self._clock()
         for j, (req, slot) in enumerate(zip(reqs, slots)):
@@ -559,17 +775,29 @@ class ContinuousBatchingEngine:
                                          cache_kind=self._cache_kind))
         return pc
 
+    def _new_draft_prefill_cache(self):
+        pc, _ = unzip(init_prefill_cache(self._draft_cfg, 1, self.max_len,
+                                         chunk=self._chunk,
+                                         cache_kind="native"))
+        return pc
+
     def _start_chunked(self, req: Request, slot: int) -> None:
         req.status = PREFILLING
         req.slot = slot
         req.t_admitted = self._clock()
         self.slots[slot] = req                  # reserve (not yet active)
         self._chunk_state = {"req": req, "slot": slot,
-                             "pcache": self._new_prefill_cache(), "start": 0}
+                             "pcache": self._new_prefill_cache(),
+                             "dcache": (self._new_draft_prefill_cache()
+                                        if self._spec
+                                        and not self._draft_shared else None),
+                             "start": 0}
 
     def _advance_chunk(self) -> int:
         """Consume one chunk of the in-flight long prompt; on the final chunk
-        finalize into the reserved slot and emit the first token."""
+        finalize into the reserved slot and emit the first token. With
+        speculation on, the draft pool's chunked prefill advances in
+        lockstep (one extra chunk executable per tick)."""
         st = self._chunk_state
         req: Request = st["req"]
         C = self._chunk
@@ -579,6 +807,10 @@ class ContinuousBatchingEngine:
         st["pcache"], last_logits = self._prefill_chunk(
             self.params, st["pcache"], jnp.asarray(buf), st["start"],
             chunk_len=cl, conv_filters=self._chunk_filters)
+        if self._spec and not self._draft_shared:
+            st["dcache"], _ = self._draft_prefill_chunk(
+                self._draft_params, st["dcache"], jnp.asarray(buf),
+                st["start"], chunk_len=cl, conv_filters=self._chunk_filters)
         st["start"] += cl
         self.stats["chunk_steps"] += 1
         if st["start"] < req.prompt_len:
@@ -586,6 +818,9 @@ class ContinuousBatchingEngine:
         dcache = self._finalize(st["pcache"], req.prompt_len)
         slot = st["slot"]
         self.cache = self._write_slot(self.cache, dcache, slot)
+        if self._spec and not self._draft_shared:
+            ddc = self._draft_finalize(st["dcache"], req.prompt_len)
+            self.draft_cache = self._write_slot(self.draft_cache, ddc, slot)
         self.stats["prefills"] += 1
         self.stats["prefill_calls"] += 1
         self._chunk_state = None
@@ -613,9 +848,17 @@ class ContinuousBatchingEngine:
         self.slots[slot] = None
         self.active[slot] = False
         self.stats["evicted"] += 1
+        # neutralize the freed slot's device metadata: a stale temperature
+        # or speculation window on a dead row would force the slow branch of
+        # every jnp.all fast path (greedy sampler, full-accept commit)
+        (self._temps, self._top_ks, self._top_ps, self._spec_len) = \
+            self._clear_meta(self._temps, self._top_ks, self._top_ps,
+                             self._spec_len, slot)
         self.finished.append(req)
         if self.reset_on_evict:
             self.cache = self._reset_slot(self.cache, slot)
+            if self._spec and not self._draft_shared:
+                self.draft_cache = self._reset_slot(self.draft_cache, slot)
 
 
 # ---------------------------------------------------------------------------
@@ -665,11 +908,13 @@ def run_request_stream(engine: ContinuousBatchingEngine,
     lat = np.asarray([r.latency for r in done])
     ttft = np.asarray([r.ttft for r in done])
     n_tokens = int(sum(len(r.tokens) for r in done))
+    decode_wall = max(wall - engine.t_admit, 1e-9)
     return {
         "n_requests": float(len(done)),
         "n_tokens": float(n_tokens),
         "wall_s": wall,
         "tok_per_s": n_tokens / wall if wall > 0 else float("inf"),
+        "decode_tok_per_s": n_tokens / decode_wall,
         "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else math.nan,
         "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else math.nan,
         "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else math.nan,

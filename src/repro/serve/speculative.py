@@ -1,0 +1,386 @@
+"""Self-speculative decoding on the distilled recurrence (paper Sec. 3 + 5.4).
+
+Distillation gives a *spectrum* of fidelities per filter: a low-order modal
+SSM is a cheap approximation of the same pretrained convolution that the
+higher-order serving SSM (or the exact Lemma-2.1 cached-conv decode) computes
+faithfully. That is precisely the draft/verify pair speculative decoding
+needs, with zero extra training:
+
+  draft  — `make_draft_params` modal-truncates every Hyena layer's serving
+           SSM to `draft_order` (E.3.1 influence ranking, residues refit
+           against the full-order distilled filter). The draft shares every
+           other weight with the target.
+  verify — all K drafted tokens (plus the pending last token) run through
+           ONE multi-token `decode_chunk` of the full-fidelity model, which
+           returns logits at every position. Greedy slots accept the longest
+           draft prefix matching the target argmax; sampled slots run
+           standard rejection sampling against the *filtered* target/draft
+           distributions (same `filter_logits` the per-slot sampler uses),
+           so the emitted distribution equals non-speculative sampling.
+  commit — rollback protocol: `snapshot_cache_slots` before the verify
+           advance; after acceptance the cache is restored and the accepted
+           prefix replayed with per-row `active_len` (skipped entirely via
+           lax.cond when every slot accepted in full). The draft slot pool
+           is advanced by the same accepted prefix from its own committed
+           state (the drafting scan runs on a functional copy).
+
+Key tree (documented in serve/README.md): every slot carries a request key
+fold_in(engine_key, rid); the token at per-slot stream index t derives
+fold_in(request_key, t), then a purpose tag — DRAW_TAG for direct draws from
+a model distribution (non-spec ticks, draft proposals, bonus tokens),
+ACCEPT_TAG for the accept/reject uniform, RESIDUAL_TAG for the residual
+draw on a rejection. Spec and non-spec paths therefore consume identical
+key streams per emitted-token position.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HYENA, LOCAL_ATTN, ModelConfig
+from repro.core.modal import ModalSSM, eval_filter
+from repro.core.truncation import modal_truncation
+from repro.models.layers import NOCTX, ShardCtx
+from repro.models.model import (decode_chunk, decode_step, layer_layout,
+                                restore_cache_slots, snapshot_cache_slots)
+from repro.serve.sampling import filter_logits, sample_token_slots
+
+# PRNG key-tree purpose tags (see module docstring / serve/README.md)
+DRAW_TAG = 1
+ACCEPT_TAG = 2
+RESIDUAL_TAG = 3
+
+
+def token_keys(slot_keys, tok_idx, tag: int):
+    """Per-(slot, stream-index) keys: fold_in(slot_key, t) then the purpose
+    tag. slot_keys (B, 2) uint32; tok_idx (B,) int32. Returns (B, 2)."""
+    def one(k, t):
+        return jax.random.fold_in(jax.random.fold_in(k, t), tag)
+    return jax.vmap(one)(slot_keys, jnp.asarray(tok_idx, jnp.int32))
+
+
+def _grid_keys(slot_keys, t_grid, tag: int):
+    """Keys for a (B, K) grid of stream indices. Returns (B, K, 2)."""
+    def one(k, t):
+        return jax.random.fold_in(jax.random.fold_in(k, t), tag)
+    return jax.vmap(jax.vmap(one, in_axes=(None, 0)))(slot_keys, t_grid)
+
+
+# ---------------------------------------------------------------------------
+# Draft model: modal truncation of the serving SSM
+# ---------------------------------------------------------------------------
+def make_draft_params(params, cfg: ModelConfig, draft_order: int, *,
+                      refit: bool = True, fit_len: int = 1024,
+                      embed: bool = False) -> Tuple[Any, ModelConfig]:
+    """Build the low-order draft: every Hyena layer's distilled modal SSM is
+    truncated to `draft_order` real states (E.3.1 h-inf influence ranking);
+    with refit=True the kept residues are re-solved against the FULL-ORDER
+    distilled filter materialized at fit_len, so the draft tracks the
+    verifier as closely as the reduced order allows. All other weights are
+    shared. Non-LCSM archs (or draft_order >= distill_order) return
+    (params, cfg) unchanged — self-speculation against an identical model
+    still works, with ~full acceptance.
+
+    embed=False returns compact order-draft_order params (own state shapes —
+    the separate-draft-pool layout the cached-conv serving mode uses).
+    embed=True exploits that modal truncation keeps a SUBSET of modes with
+    their poles untouched: the truncated system's state is exactly a
+    sub-vector of the serving state, so the kept (refit) residues are
+    scattered back into full-order arrays with zeros on dropped modes. The
+    resulting draft reads the SERVING cache directly — no second slot pool,
+    no draft prefill, no draft-state advance (draft_cfg == cfg)."""
+    if cfg.hyena is None or draft_order >= cfg.hyena.distill_order:
+        return params, cfg
+    d2 = max(draft_order // 2, 1)
+    draft_cfg = cfg if embed else cfg.replace(
+        hyena=dataclasses.replace(cfg.hyena, distill_order=2 * d2))
+
+    def trunc(dp):
+        ssm = ModalSSM(dp["log_a"], dp["theta"], dp["R_re"], dp["R_im"],
+                       dp["h0"])
+        h = eval_filter(ssm, fit_len) if refit else None
+        out, idx = modal_truncation(ssm, d2, refit=refit, h=h,
+                                    return_indices=True)
+        if not embed:
+            return {"log_a": out.log_a, "theta": out.theta, "R_re": out.R_re,
+                    "R_im": out.R_im, "h0": out.h0}
+        put = lambda vals: jnp.put_along_axis(
+            jnp.zeros_like(dp["R_re"]), idx, vals, axis=-1, inplace=False)
+        return {"log_a": dp["log_a"], "theta": dp["theta"],
+                "R_re": put(out.R_re), "R_im": put(out.R_im), "h0": out.h0}
+
+    new = jax.tree.map(lambda x: x, params)       # fresh containers
+    n_groups, n_rem = layer_layout(cfg)
+    for i, kind in enumerate(cfg.pattern):
+        if kind == HYENA:
+            new["groups"][f"l{i}"]["mix"]["distilled"] = trunc(
+                params["groups"][f"l{i}"]["mix"]["distilled"])
+    for i in range(n_rem):
+        if cfg.blocks[n_groups * len(cfg.pattern) + i] == HYENA:
+            new["rem"][i]["mix"]["distilled"] = trunc(
+                params["rem"][i]["mix"]["distilled"])
+    return new, draft_cfg
+
+
+# ---------------------------------------------------------------------------
+# Draft phase: K single-token steps fused into one executable
+# ---------------------------------------------------------------------------
+def draft_tokens(draft_params, draft_cache, last, K: int, cfg: ModelConfig, *,
+                 temperature, top_k, top_p, slot_keys, tok_idx,
+                 ctx: ShardCtx = NOCTX):
+    """Draft K tokens per slot with the low-order model: a lax.scan of
+    `decode_step` feeding each slot's own samples back in. Proposals for
+    stream index t are drawn with the DRAW_TAG key of t — the same key the
+    non-speculative path would use for that position. The advanced draft
+    cache is DISCARDED: the persistent draft pool stays at the committed
+    position and is advanced by the accepted prefix in the verify step.
+    Returns (tokens (B, K), draft_logits (B, K, V))."""
+    def body(carry, j):
+        cache, tok = carry
+        cache, logits = decode_step(draft_params, cache, tok[:, None], cfg,
+                                    ctx=ctx)
+        lg = logits[:, 0, :]
+        keys = token_keys(slot_keys, tok_idx + j, DRAW_TAG)
+        nxt = sample_token_slots(keys, lg, temperature=temperature,
+                                 top_k=top_k, top_p=top_p)
+        return (cache, nxt), (nxt, lg)
+
+    (_, _), (toks, lgs) = jax.lax.scan(body, (draft_cache, last),
+                                       jnp.arange(K, dtype=jnp.int32))
+    return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(lgs, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: greedy prefix match / rejection sampling
+# ---------------------------------------------------------------------------
+def verify_tokens(target_logits, draft_logits, tokens, spec_len, *,
+                  temperature, top_k, top_p, slot_keys, tok_idx):
+    """Decide per-slot acceptance and the correction token.
+
+    target_logits: (B, C, V) from the full-fidelity multi-token verify over
+    tokens (B, C) = [last, d_1..d_K]; draft_logits: (B, K, V) (q_j is the
+    draft distribution d_{j+1} was proposed from); spec_len (B,) in [1, C]
+    caps how many positions row b actually speculates (1 = plain decode).
+
+    Greedy rows (temperature <= 0) accept the longest prefix where the draft
+    equals the target argmax; the correction is the target argmax at the
+    first mismatch (or the bonus position). Sampled rows rejection-sample:
+    accept d_{j+1} with prob min(1, p_j(d)/q_j(d)) over the FILTERED
+    distributions, emit a residual draw from norm(max(p - q, 0)) on the
+    first rejection, or a direct target draw for the bonus / non-spec rows.
+
+    Returns (emitted (B, C) int32 — first n_emit entries valid per row,
+    n_emit (B,) in [1, spec_len], n_acc (B,), correction (B,)).
+
+    An all-greedy fast path (lax.cond) skips the filtered-distribution and
+    rejection machinery entirely — the serving hot loop is usually greedy."""
+    B, C, V = target_logits.shape
+    K = C - 1
+    assert K >= 1, "verify needs at least one drafted token"
+    tok_idx = jnp.asarray(tok_idx, jnp.int32)
+    spec_len = jnp.asarray(spec_len, jnp.int32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    greedy_row = temperature <= 0.0
+    g = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)        # (B, C)
+    drafts = tokens[:, 1:]                                          # (B, K)
+    match_g = drafts == g[:, :K]
+
+    def run_len(match):
+        return jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+
+    def greedy_branch(_):
+        n_acc = jnp.minimum(run_len(match_g), spec_len - 1)
+        g_r = jnp.take_along_axis(g, n_acc[:, None], axis=1)[:, 0]
+        return n_acc, g_r
+
+    def sampled_branch(_):
+        flat = lambda x: x.reshape(B * K, V)
+        rep = lambda p: jnp.repeat(p, K, axis=0)
+        p_prob = jax.nn.softmax(filter_logits(
+            flat(target_logits[:, :K]), temperature=rep(temperature),
+            top_k=rep(top_k), top_p=rep(top_p)).reshape(B, K, V), axis=-1)
+        q_prob = jax.nn.softmax(filter_logits(
+            flat(draft_logits), temperature=rep(temperature),
+            top_k=rep(top_k), top_p=rep(top_p)).reshape(B, K, V), axis=-1)
+        p_d = jnp.take_along_axis(p_prob, drafts[..., None], -1)[..., 0]
+        q_d = jnp.take_along_axis(q_prob, drafts[..., None], -1)[..., 0]
+        t_grid = tok_idx[:, None] + jnp.arange(K, dtype=jnp.int32)[None, :]
+        u = jax.vmap(jax.vmap(jax.random.uniform))(
+            _grid_keys(slot_keys, t_grid, ACCEPT_TAG))
+        accept_s = u * jnp.clip(q_d, 1e-30) <= p_d
+        match = jnp.where(greedy_row[:, None], match_g, accept_s)
+        n_acc = jnp.minimum(run_len(match), spec_len - 1)
+        r = n_acc
+        # correction token at position r (per row)
+        corr_keys = token_keys(slot_keys, tok_idx + r, DRAW_TAG)
+        res_keys = token_keys(slot_keys, tok_idx + r, RESIDUAL_TAG)
+        p_r = filter_logits(
+            jnp.take_along_axis(target_logits, r[:, None, None],
+                                axis=1)[:, 0],
+            temperature=temperature, top_k=top_k, top_p=top_p)      # (B, V)
+        direct = jax.vmap(jax.random.categorical)(corr_keys,
+                                                  p_r).astype(jnp.int32)
+        # genuine rejection (not the spec_len cap, not the bonus slot)
+        rejected = r < jnp.minimum(spec_len - 1, K)
+        p_at_r = jnp.take_along_axis(
+            p_prob, jnp.minimum(r, K - 1)[:, None, None], axis=1)[:, 0]
+        q_at_r = jnp.take_along_axis(
+            q_prob, jnp.minimum(r, K - 1)[:, None, None], axis=1)[:, 0]
+        diff = jnp.maximum(p_at_r - q_at_r, 0.0)
+        ok = jnp.sum(diff, axis=-1, keepdims=True) > 1e-12
+        res_lg = jnp.where(ok & (diff > 0.0), jnp.log(jnp.clip(diff, 1e-30)),
+                           -jnp.inf)
+        # degenerate residual (p == q exactly): fall back to a direct draw
+        res_lg = jnp.where(ok, res_lg, jnp.log(jnp.clip(p_at_r, 1e-30)))
+        residual = jax.vmap(jax.random.categorical)(
+            res_keys, res_lg).astype(jnp.int32)
+        corr_sampled = jnp.where(rejected, residual, direct)
+        g_r = jnp.take_along_axis(g, r[:, None], axis=1)[:, 0]
+        return n_acc, jnp.where(greedy_row, g_r, corr_sampled)
+
+    n_acc, correction = jax.lax.cond(jnp.all(greedy_row), greedy_branch,
+                                     sampled_branch, None)
+
+    jgrid = jnp.arange(C, dtype=jnp.int32)[None, :]
+    drafts_pad = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((B, 1), jnp.int32)], axis=1)      # (B, C)
+    emitted = jnp.where(jgrid < n_acc[:, None], drafts_pad,
+                        jnp.where(jgrid == n_acc[:, None],
+                                  correction[:, None], 0))
+    return emitted, n_acc + 1, n_acc, correction
+
+
+# ---------------------------------------------------------------------------
+# Verify + commit: one fused executable per tick
+# ---------------------------------------------------------------------------
+def spec_verify_commit(params, draft_params, cache, last, draft_toks,
+                       draft_logits, spec_len, draft_cache, cfg: ModelConfig,
+                       draft_cfg: ModelConfig, *, temperature, top_k, top_p,
+                       slot_keys, tok_idx, ctx: ShardCtx = NOCTX,
+                       conv_filters=None, select_commit: bool = False):
+    """One speculative round against the slot pools (see module docstring).
+
+    Rollback protocol, two implementations:
+      * select_commit=True (pure distilled-Hyena archs): the verify
+        decode_chunk collects per-position states and the committed cache is
+        SELECTED at each row's accepted length (`commit_cache_from_states`)
+        — one forward pass total.
+      * generic: snapshot -> decode_chunk over C = K+1 tokens with per-row
+        active_len = spec_len (logits at every position) -> acceptance ->
+        restore + replay with active_len = n_emit (logits skipped). The
+        replay is skipped entirely via lax.cond when every slot accepted in
+        full (the verify advance already IS the committed state then).
+
+    `draft_cache` is None for the state-sharing draft (embed=True draft
+    params read the serving cache — nothing to advance); for the
+    separate-pool draft (cached-conv mode) it is still at the committed
+    position — the drafting scan ran on a copy — and is advanced here by
+    the same accepted prefix.
+
+    Returns (cache, draft_cache_or_None, emitted (B, C), n_emit (B,),
+    new_last (B,), new_tok_idx (B,))."""
+    B, K = draft_toks.shape
+    tokens = jnp.concatenate([last[:, None], draft_toks], axis=1)   # (B, C)
+    if select_commit:
+        from repro.models.model import commit_cache_from_states
+        _, logits, aux = decode_chunk(params, cache, tokens, cfg,
+                                      active_len=spec_len, ctx=ctx,
+                                      conv_filters=conv_filters,
+                                      collect_states=True)
+        emitted, n_emit, n_acc, correction = verify_tokens(
+            logits, draft_logits, tokens, spec_len, temperature=temperature,
+            top_k=top_k, top_p=top_p, slot_keys=slot_keys, tok_idx=tok_idx)
+        new_cache = commit_cache_from_states(aux, n_emit, cfg)
+    else:
+        snap = snapshot_cache_slots(cache, cfg, K + 1)
+        cache1, logits = decode_chunk(params, cache, tokens, cfg,
+                                      active_len=spec_len, ctx=ctx,
+                                      conv_filters=conv_filters)
+        emitted, n_emit, n_acc, correction = verify_tokens(
+            logits, draft_logits, tokens, spec_len, temperature=temperature,
+            top_k=top_k, top_p=top_p, slot_keys=slot_keys, tok_idx=tok_idx)
+
+        def keep(args):
+            cache1, _ = args
+            return cache1
+
+        def roll(args):
+            cache1, snap = args
+            rb = restore_cache_slots(cache1, snap, cfg)
+            c2, _ = decode_chunk(params, rb, tokens, cfg, active_len=n_emit,
+                                 ctx=ctx, conv_filters=conv_filters,
+                                 need_logits=False)
+            return c2
+
+        new_cache = jax.lax.cond(jnp.all(n_emit == spec_len), keep, roll,
+                                 (cache1, snap))
+    new_draft_cache = None
+    if draft_cache is not None:
+        new_draft_cache, _ = decode_chunk(draft_params, draft_cache, tokens,
+                                          draft_cfg, active_len=n_emit,
+                                          ctx=ctx, need_logits=False)
+    return (new_cache, new_draft_cache, emitted, n_emit, correction,
+            tok_idx + n_emit)
+
+
+def spec_round(params, draft_params, cache, last, spec_len, draft_cache,
+               K: int, cfg: ModelConfig, draft_cfg: ModelConfig, *,
+               temperature, top_k, top_p, slot_keys, tok_idx,
+               ctx: ShardCtx = NOCTX, conv_filters=None,
+               select_commit: bool = False):
+    """One full speculative round — draft scan + verify/commit — fused into
+    a single executable so the serving loop pays ONE dispatch per up to
+    K + 1 tokens per slot. The draft scan reads the serving cache itself
+    when draft_cache is None (state-sharing draft), else the separate draft
+    pool; either way its advanced state is discarded and only the accepted
+    prefix is committed."""
+    draft_src = cache if draft_cache is None else draft_cache
+    draft_toks, draft_logits = draft_tokens(
+        draft_params, draft_src, last, K, draft_cfg, temperature=temperature,
+        top_k=top_k, top_p=top_p, slot_keys=slot_keys, tok_idx=tok_idx,
+        ctx=ctx)
+    return spec_verify_commit(
+        params, draft_params, cache, last, draft_toks, draft_logits,
+        spec_len, draft_cache, cfg, draft_cfg, temperature=temperature,
+        top_k=top_k, top_p=top_p, slot_keys=slot_keys, tok_idx=tok_idx,
+        ctx=ctx, conv_filters=conv_filters, select_commit=select_commit)
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points (shared memo with the other serving executables)
+# ---------------------------------------------------------------------------
+def jitted_spec_round(cfg: ModelConfig, draft_cfg: ModelConfig, K: int,
+                      shared_draft: bool, ctx: ShardCtx = NOCTX):
+    """Positional args: (params, draft_params, cache, last, spec_len,
+    draft_cache) — pass draft_cache=None with shared_draft=True. The
+    serving cache (and the draft pool, when separate) is donated. The
+    selection-commit is enabled automatically for archs that support it."""
+    from repro.models.model import supports_state_select
+    from repro.serve.engine import _JIT_CACHE
+    sel = shared_draft and supports_state_select(cfg)
+    key = ("spec_round", cfg, draft_cfg, K, shared_draft, id(ctx))
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(spec_round, K=K, cfg=cfg, draft_cfg=draft_cfg,
+                              ctx=ctx, select_commit=sel),
+            donate_argnums=(2,) if shared_draft else (2, 5))
+    return _JIT_CACHE[key]
+
+
+def validate_spec_config(cfg: ModelConfig, spec_k: int) -> None:
+    """Speculation horizon constraints: ring buffers must hold a whole
+    verify window (snapshot regions would alias otherwise)."""
+    if spec_k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    if any(b == LOCAL_ATTN for b in cfg.blocks) and cfg.window > 0 \
+            and cfg.window < spec_k + 1:
+        raise ValueError(
+            f"spec_k={spec_k} needs window >= {spec_k + 1} for the ring "
+            f"snapshot (got window={cfg.window})")
+    if cfg.enc_dec or cfg.frontend != "none":
+        raise ValueError("speculative decoding does not support "
+                         "enc-dec/frontend architectures")

@@ -1,0 +1,427 @@
+"""Self-speculative decoding on the distilled recurrence.
+
+Invariants:
+  * greedy speculative serving is token-for-token identical to
+    non-speculative sequential generation, for every cache kind (distilled
+    modal state / cached-conv kv / attention KV), every K in {1, 2, 4},
+    including evictions mid-speculation (max-tokens and EOS landing inside
+    a verify batch) and a garbage draft that diverges on token 1;
+  * the rollback protocol is exact: snapshot -> decode j <= K tokens ->
+    restore -> decode is BIT-identical to never having speculated, for
+    every layer family (ring-buffer slot_pos included);
+  * rejection-sampling verify preserves the filtered target support and
+    bounds the acceptance count (hypothesis property test);
+  * the per-(slot, token-index) PRNG key tree is path-independent, so the
+    speculative and non-speculative samplers consume identical key streams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ATTN, HYENA, LOCAL_ATTN, MAMBA2, RGLRU,
+                                HyenaConfig, ModelConfig, RGLRUConfig,
+                                SSMConfig)
+from repro.core.distill import distill_model
+from repro.core.modal import ModalSSM, eval_filter
+from repro.distributed.sharding import unzip
+from repro.models.model import (decode_step, init_cache, init_params,
+                                materialize_conv_filters, prefill,
+                                restore_cache_slots, snapshot_cache_slots,
+                                write_cache_slot)
+from repro.serve.engine import GenerationEngine
+from repro.serve.sampling import filter_logits, sample_token_slots
+from repro.serve.scheduler import ContinuousBatchingEngine, Request
+from repro.serve.speculative import (make_draft_params, token_keys,
+                                     verify_tokens)
+
+MAX_LEN = 48
+PROMPT_LENS = (4, 7, 12, 20, 9)
+GEN_LENS = (8, 5, 11, 6, 9)       # none a multiple of K+1 -> evictions land
+                                  # mid-verify-batch for every K tested
+
+
+def _hyena_cfg(name="spec-hyena"):
+    return ModelConfig(name=name, family="lcsm", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab=64, act="gelu", norm="layernorm",
+                       pattern=(HYENA,),
+                       hyena=HyenaConfig(n_filter_heads=2, filter_order=16,
+                                         filter_emb=9, distill_order=8),
+                       max_seq=512, dtype="float32")
+
+
+def _attn_cfg(name="spec-attn", pattern=(ATTN,), window=0):
+    return ModelConfig(name=name, family="dense", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab=64, act="gelu", norm="layernorm",
+                       pattern=pattern, window=window, max_seq=512,
+                       dtype="float32")
+
+
+def _mamba_cfg(name="spec-mamba"):
+    return ModelConfig(name=name, family="ssm", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab=64, act="gelu", norm="layernorm",
+                       pattern=(MAMBA2,),
+                       ssm=SSMConfig(d_state=8, head_dim=8, n_groups=1,
+                                     expand=2, d_conv=4, chunk=4),
+                       max_seq=512, dtype="float32")
+
+
+def _rglru_cfg(name="spec-rglru"):
+    return ModelConfig(name=name, family="hybrid", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab=64, act="gelu", norm="layernorm",
+                       pattern=(RGLRU,), rglru=RGLRUConfig(d_conv=4, expand=1),
+                       max_seq=512, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def hyena_model():
+    cfg = _hyena_cfg()
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    params, _ = distill_model(params, cfg, steps=300, L=256)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def attn_model():
+    cfg = _attn_cfg()
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def local_model():
+    # window < prompt+gen so the ring buffer wraps DURING speculation
+    cfg = _attn_cfg("spec-local-id", pattern=(LOCAL_ATTN,), window=16)
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def _prompts(vocab, lens=PROMPT_LENS, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=n).astype(np.int32) for n in lens]
+
+
+def _sequential_greedy(cfg, params, prompts, gens, mode):
+    eng = GenerationEngine(params, cfg, max_len=MAX_LEN, mode=mode)
+    return [np.asarray(eng.generate(jax.random.PRNGKey(1),
+                                    jnp.asarray(p)[None], g)[0][0])
+            for p, g in zip(prompts, gens)]
+
+
+# ---------------------------------------------------------------------------
+# Greedy speculative output == non-speculative output, token for token
+# ---------------------------------------------------------------------------
+# full (mode x K) matrix; the low-K combos of the non-flagship modes run in
+# tier 2 (make test-all) — K=4 exercises the same executables plus the
+# longer rollback window, so tier-1 keeps one spec compile per mode
+_slow = pytest.mark.slow
+IDENTITY_CASES = [
+    ("distilled", "hyena", 1), ("distilled", "hyena", 2),
+    ("distilled", "hyena", 4), ("cached_conv", "hyena", 4),
+    ("distilled", "attn", 4), ("distilled", "local", 4),
+    pytest.param("cached_conv", "hyena", 1, marks=_slow),
+    pytest.param("cached_conv", "hyena", 2, marks=_slow),
+    pytest.param("distilled", "attn", 1, marks=_slow),
+    pytest.param("distilled", "attn", 2, marks=_slow),
+    pytest.param("distilled", "local", 2, marks=_slow),
+]
+
+
+@pytest.mark.parametrize("mode,arch,K", IDENTITY_CASES)
+def test_greedy_spec_matches_nonspec(hyena_model, attn_model, local_model,
+                                     mode, arch, K):
+    """Speculative serving (draft order 4 of 8) emits exactly the tokens of
+    sequential non-speculative generation, for every cache kind and every K
+    — including the windowed-attention ring, whose buffer wraps DURING a
+    verify batch once the context exceeds the window. GEN_LENS are chosen
+    so max-token evictions land mid-verify-batch (the remaining speculated
+    tokens must be dropped)."""
+    cfg, params = {"hyena": hyena_model, "attn": attn_model,
+                   "local": local_model}[arch]
+    prompts = _prompts(cfg.vocab)
+    want = _sequential_greedy(cfg, params, prompts, GEN_LENS, mode)
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode=mode, spec_k=K, draft_order=4)
+    reqs = [eng.submit(p, max_new_tokens=g)
+            for p, g in zip(prompts, GEN_LENS)]
+    eng.run()
+    for r, w in zip(reqs, want):
+        assert r.status == "finished" and r.finish_reason == "max_tokens"
+        np.testing.assert_array_equal(np.asarray(r.tokens), w)
+    assert eng.stats["spec_rounds"] > 0
+    assert 0 <= eng.stats["spec_accepted"] <= eng.stats["spec_drafted"]
+
+
+def test_eos_eviction_mid_speculation(hyena_model):
+    """EOS produced inside a verify batch stops the request AT the EOS token
+    — later accepted tokens from the same round are dropped."""
+    cfg, params = hyena_model
+    p = _prompts(cfg.vocab)[0]
+    ref = _sequential_greedy(cfg, params, [p], [8], "distilled")[0]
+    eos = int(ref[2])                       # fires mid-batch for K=4
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=1, max_len=MAX_LEN,
+                                   spec_k=4, draft_order=4)
+    req = eng.submit(p, max_new_tokens=8, eos_id=eos)
+    eng.run()
+    assert req.finish_reason == "eos"
+    np.testing.assert_array_equal(np.asarray(req.tokens), ref[:3])
+
+
+def test_diverging_draft_still_exact(hyena_model):
+    """A garbage draft (random weights — diverges on token 1, acceptance ~0)
+    must not change the OUTPUT: the verifier's correction tokens alone
+    reproduce non-speculative generation."""
+    cfg, params = hyena_model
+    garbage, _ = unzip(init_params(jax.random.PRNGKey(123), cfg))
+    prompts = _prompts(cfg.vocab)[:3]
+    gens = GEN_LENS[:3]
+    want = _sequential_greedy(cfg, params, prompts, gens, "distilled")
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   spec_k=4, draft_order=4,
+                                   draft_model=(garbage, cfg))
+    reqs = [eng.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    eng.run()
+    for r, w in zip(reqs, want):
+        np.testing.assert_array_equal(np.asarray(r.tokens), w)
+    # the garbage draft gets (almost) nothing accepted
+    assert eng.stats["spec_accepted"] <= eng.stats["spec_drafted"] * 0.3
+
+
+def test_mixed_spec_and_nonspec_slots(hyena_model):
+    """A request that opts out of speculation (Request.spec=False) coexists
+    with speculating slots and still matches sequential generation."""
+    cfg, params = hyena_model
+    prompts = _prompts(cfg.vocab)[:2]
+    want = _sequential_greedy(cfg, params, prompts, GEN_LENS[:2], "distilled")
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   spec_k=4, draft_order=4)
+    r0 = eng.submit(prompts[0], max_new_tokens=GEN_LENS[0])
+    r1 = eng.submit_request(Request(rid=99, prompt=prompts[1],
+                                    max_new_tokens=GEN_LENS[1], spec=False))
+    eng.run()
+    np.testing.assert_array_equal(np.asarray(r0.tokens), want[0])
+    np.testing.assert_array_equal(np.asarray(r1.tokens), want[1])
+
+
+# ---------------------------------------------------------------------------
+# Rollback exactness: snapshot -> decode -> restore -> decode is bit-exact
+# ---------------------------------------------------------------------------
+ROLLBACK_FAMILIES = [
+    ("hyena-distilled", _hyena_cfg, "native"),
+    ("hyena-cachedconv", _hyena_cfg, "conv"),
+    ("attn-linear", _attn_cfg, "native"),
+    ("attn-ring", lambda: _attn_cfg("spec-local", pattern=(LOCAL_ATTN,),
+                                    window=16), "native"),
+    ("mamba2", _mamba_cfg, "native"),
+    ("rglru", _rglru_cfg, "native"),
+]
+
+
+@pytest.mark.parametrize("name,mkcfg,kind",
+                         ROLLBACK_FAMILIES,
+                         ids=[f[0] for f in ROLLBACK_FAMILIES])
+def test_snapshot_restore_is_bit_exact(name, mkcfg, kind):
+    """snapshot -> decode j <= K tokens -> restore -> decode produces
+    BIT-identical logits and caches to never having speculated — per layer
+    family, which pins down ring-buffer slot_pos rollback in particular."""
+    K, j = 4, 3
+    cfg = mkcfg()
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(0)
+    lens = [8, 16, 12] if cfg.ssm is not None else [5, 9, 7]
+    B = len(lens)
+    pool, _ = unzip(init_cache(cfg, B, MAX_LEN, cache_kind=kind,
+                               per_slot=True))
+    filters = (materialize_conv_filters(params, cfg, MAX_LEN)
+               if cfg.hyena is not None and kind == "conv" else None)
+    for b, L in enumerate(lens):
+        p = rng.integers(0, cfg.vocab, size=L).astype(np.int32)
+        single, _ = prefill(params, jnp.asarray(p)[None], cfg,
+                            max_len=MAX_LEN, cache_kind=kind)
+        pool = write_cache_slot(pool, single, b)
+
+    def advance(cache, n, seed):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(n, B)), jnp.int32)
+        lgs = []
+        for t in range(n):
+            cache, lg = decode_step(params, cache, toks[t][:, None], cfg,
+                                    conv_filters=filters)
+            lgs.append(np.asarray(lg))
+        return cache, lgs
+
+    # reference: decode 2 tokens with no speculation in between
+    rng2 = np.random.default_rng(7)
+    cont = jnp.asarray(rng2.integers(0, cfg.vocab, size=(2, B)), jnp.int32)
+
+    def run_cont(cache):
+        lgs = []
+        for t in range(2):
+            cache, lg = decode_step(params, cache, cont[t][:, None], cfg,
+                                    conv_filters=filters)
+            lgs.append(np.asarray(lg))
+        return cache, lgs
+
+    want_cache, want_lgs = run_cont(pool)
+
+    snap = snapshot_cache_slots(pool, cfg, K)
+    spec, _ = advance(pool, j, seed=3)          # speculate j <= K tokens
+    rolled = restore_cache_slots(spec, snap, cfg)
+    got_cache, got_lgs = run_cont(rolled)
+
+    for a, b_ in zip(want_lgs, got_lgs):
+        assert np.array_equal(a, b_), name
+    for (path, a), (_, b_) in zip(
+            jax.tree_util.tree_leaves_with_path(want_cache),
+            jax.tree_util.tree_leaves_with_path(got_cache)):
+        assert np.array_equal(np.asarray(a), np.asarray(b_)), (name, path)
+
+
+# ---------------------------------------------------------------------------
+# Rejection-sampling verify: support + acceptance-count properties
+# ---------------------------------------------------------------------------
+def _run_verify(seed, B, K, V, temps, top_k, top_p, spec_len=None):
+    rng = np.random.default_rng(seed)
+    tl = jnp.asarray(rng.normal(size=(B, K + 1, V)) * 3, jnp.float32)
+    dl = jnp.asarray(rng.normal(size=(B, K, V)) * 3, jnp.float32)
+    temps = jnp.asarray(temps, jnp.float32)
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), B)
+    tok_idx = jnp.asarray(rng.integers(0, 100, size=B), jnp.int32)
+    # drafts proposed from the draft's filtered distribution (q > 0)
+    qf = filter_logits(dl.reshape(B * K, V),
+                       temperature=jnp.repeat(jnp.clip(temps, 1e-3), K),
+                       top_k=jnp.repeat(top_k, K),
+                       top_p=jnp.repeat(top_p, K))
+    drafts = jax.vmap(jax.random.categorical)(
+        jax.random.split(jax.random.PRNGKey(seed + 1), B * K),
+        qf).reshape(B, K).astype(jnp.int32)
+    tokens = jnp.concatenate([jnp.zeros((B, 1), jnp.int32), drafts], axis=1)
+    sl = (jnp.full((B,), K + 1, jnp.int32) if spec_len is None
+          else jnp.asarray(spec_len, jnp.int32))
+    emitted, n_emit, n_acc, corr = verify_tokens(
+        tl, dl, tokens, sl, temperature=temps, top_k=top_k, top_p=top_p,
+        slot_keys=keys, tok_idx=tok_idx)
+    return (np.asarray(emitted), np.asarray(n_emit), np.asarray(n_acc),
+            np.asarray(corr), tl, tokens, temps, top_k, top_p, np.asarray(sl))
+
+
+def _check_verify_props(out):
+    emitted, n_emit, n_acc, corr, tl, tokens, temps, top_k, top_p, sl = out
+    B, C, V = tl.shape
+    K = C - 1
+    assert ((1 <= n_emit) & (n_emit <= sl)).all()
+    assert ((0 <= n_acc) & (n_acc <= K)).all()
+    pf = np.asarray(filter_logits(
+        jnp.asarray(tl.reshape(B * C, V)),
+        temperature=jnp.repeat(jnp.clip(temps, 1e-3), C),
+        top_k=jnp.repeat(top_k, C),
+        top_p=jnp.repeat(top_p, C))).reshape(B, C, V)
+    for b in range(B):
+        r = n_acc[b]
+        # accepted prefix = the drafts, then the correction token
+        np.testing.assert_array_equal(emitted[b, :r],
+                                      np.asarray(tokens)[b, 1:r + 1])
+        assert emitted[b, r] == corr[b]
+        if float(temps[b]) <= 0.0:
+            assert corr[b] == int(np.argmax(tl[b, r]))
+        else:
+            # correction lies inside the FILTERED target support at its
+            # position (residual support is a subset of it)
+            assert np.isfinite(pf[b, r, corr[b]])
+
+
+def test_verify_tokens_basic_properties():
+    out = _run_verify(0, B=4, K=4, V=32,
+                      temps=[0.0, 1.0, 0.7, 2.0], top_k=[0, 0, 5, 0],
+                      top_p=[1.0, 1.0, 1.0, 0.8])
+    _check_verify_props(out)
+    # spec_len = 1 rows behave like plain decode: exactly one token emitted
+    out = _run_verify(1, B=3, K=4, V=16, temps=[0.0, 1.0, 0.5],
+                      top_k=[0, 3, 0], top_p=[1.0, 1.0, 0.9],
+                      spec_len=[1, 1, 5])
+    emitted, n_emit = out[0], out[1]
+    assert n_emit[0] == 1 and n_emit[1] == 1
+
+
+def test_verify_tokens_property_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4),
+           st.lists(st.floats(0.0, 3.0), min_size=3, max_size=3),
+           st.lists(st.integers(0, 8), min_size=3, max_size=3),
+           st.lists(st.floats(0.1, 1.0), min_size=3, max_size=3))
+    @settings(max_examples=25, deadline=None)
+    def prop(seed, K, temps, top_k, top_p):
+        out = _run_verify(seed, B=3, K=K, V=16, temps=temps, top_k=top_k,
+                          top_p=top_p)
+        _check_verify_props(out)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# PRNG key tree: spec and non-spec consume identical streams
+# ---------------------------------------------------------------------------
+def test_token_key_tree_is_path_independent():
+    base = jax.random.PRNGKey(0)
+    slot_keys = jnp.stack([jax.random.fold_in(base, rid) for rid in (3, 7)])
+    t = jnp.asarray([5, 9], jnp.int32)
+    got = token_keys(slot_keys, t, 1)
+    for b, (rid, ti) in enumerate([(3, 5), (7, 9)]):
+        want = jax.random.fold_in(
+            jax.random.fold_in(jax.random.fold_in(base, rid), ti), 1)
+        np.testing.assert_array_equal(np.asarray(got[b]), np.asarray(want))
+
+
+def test_sample_token_slots_per_row_keys():
+    """Per-row keys: a row's draw depends only on its own key (the spec
+    verifier re-draws from the same split key per verify position)."""
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(3, 32)),
+                        jnp.float32)
+    temps = jnp.full((3,), 1.0)
+    tks = jnp.zeros((3,), jnp.int32)
+    tps = jnp.ones((3,), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    a = sample_token_slots(keys, logits, temperature=temps, top_k=tks,
+                           top_p=tps)
+    keys2 = keys.at[2].set(jax.random.PRNGKey(42))     # perturb another row
+    b = sample_token_slots(keys2, logits, temperature=temps, top_k=tks,
+                           top_p=tps)
+    assert int(a[0]) == int(b[0]) and int(a[1]) == int(b[1])
+
+
+# ---------------------------------------------------------------------------
+# Draft construction: embedded truncation == compact truncation
+# ---------------------------------------------------------------------------
+def test_embedded_draft_matches_compact_truncation(hyena_model):
+    """The state-sharing draft (full-order arrays, zeroed dropped residues)
+    realizes exactly the same filter as the compact order-d truncation, and
+    keeps every pole untouched (the property that lets it read the serving
+    cache)."""
+    cfg, params = hyena_model
+    emb, emb_cfg = make_draft_params(params, cfg, 4, embed=True)
+    cmp_, cmp_cfg = make_draft_params(params, cfg, 4, embed=False)
+    assert emb_cfg == cfg
+    assert cmp_cfg.hyena.distill_order == 4
+    dp0 = params["groups"]["l0"]["mix"]["distilled"]
+    dpe = emb["groups"]["l0"]["mix"]["distilled"]
+    dpc = cmp_["groups"]["l0"]["mix"]["distilled"]
+    np.testing.assert_array_equal(np.asarray(dpe["log_a"]),
+                                  np.asarray(dp0["log_a"]))   # poles shared
+    # exactly order/2 modes carry nonzero residues per filter
+    nz = (np.abs(np.asarray(dpe["R_re"])) +
+          np.abs(np.asarray(dpe["R_im"])) > 0).sum(-1)
+    assert (nz <= 2).all()
+    L = 64
+    he = eval_filter(ModalSSM(dpe["log_a"], dpe["theta"], dpe["R_re"],
+                              dpe["R_im"], dpe["h0"]), L)
+    hc = eval_filter(ModalSSM(dpc["log_a"], dpc["theta"], dpc["R_re"],
+                              dpc["R_im"], dpc["h0"]), L)
+    np.testing.assert_allclose(np.asarray(he), np.asarray(hc), rtol=1e-5,
+                               atol=1e-6)
