@@ -18,6 +18,7 @@ from benchmarks.common import row, timeit
 from benchmarks.models import build, hyena_cfg, transformer_cfg
 from repro.serve.engine import GenerationEngine
 from repro.serve.scheduler import (ContinuousBatchingEngine,
+                                   measure_saturated_decode,
                                    run_request_stream,
                                    synthesize_request_stream)
 
@@ -59,15 +60,15 @@ PROMPT_LENS = (32, 48, 64, 96, 128)     # 5 distinct lengths, 3 buckets
 GEN_TOKENS = (16, 48)
 N_SLOTS, MAX_LEN = 4, 192
 PREFILL_BATCH = 2
-SPEC_K, DRAFT_ORDER = 4, 4              # speculative case (greedy sampling)
+SPEC_K = "auto"                         # speculative case: autotuned config
 
 
-def _stream_case(cfg, params, mode, spec_k=0, draft_order=None):
+def _stream_case(cfg, params, mode, spec_k=0):
     from repro.serve.metrics import count_compiles, speculative_summary
     eng = ContinuousBatchingEngine(params, cfg, n_slots=N_SLOTS,
                                    max_len=MAX_LEN, mode=mode,
                                    max_prefills_per_step=PREFILL_BATCH,
-                                   spec_k=spec_k, draft_order=draft_order)
+                                   spec_k=spec_k)
     eng.warmup(PROMPT_LENS)
     stream = synthesize_request_stream(
         np.random.default_rng(0), N_REQ, rate=RATE, prompt_lens=PROMPT_LENS,
@@ -80,10 +81,24 @@ def _stream_case(cfg, params, mode, spec_k=0, draft_order=None):
     m["steady_state_compiles"] = scope.compiles
     m["prefill_calls"] = eng.stats["prefill_calls"]
     m["prefills"] = eng.stats["prefills"]
-    if spec_k:
-        m.update(speculative_summary(eng.stats, spec_k))
-        m["spec_k"] = spec_k
+    if eng._spec:
+        m.update(speculative_summary(eng.stats))
+        m["spec_k"] = eng._spec_k
         m["draft_order"] = eng.draft_order
+        m["spec_branch"] = eng._spec_branch
+    if eng.spec_report is not None:
+        m["autotune"] = eng.spec_report.table()
+        m["spec_enabled"] = eng.spec_report.chosen is not None
+    # saturated-decode throughput: every slot busy, pure decode ticks. The
+    # Poisson stream's decode_tok_per_s is arrival-diluted and noisy; THIS
+    # is the number check_regression gates the spec-vs-plain comparison on.
+    # Measured after (outside) the compile-count scope.
+    sat = measure_saturated_decode(eng, prompt_len=32)
+    m["decode_sat_tok_per_s"] = sat["decode_tok_per_s"]
+    if sat["acceptance"] is not None:
+        m["sat_acceptance"] = sat["acceptance"]
+    if sat["tokens_per_slot_round"] is not None:
+        m["sat_tokens_per_slot_round"] = sat["tokens_per_slot_round"]
     return m
 
 
@@ -100,15 +115,22 @@ def stream_main(out):
             ("distilled_spec", hcfg, hparams, "distilled", SPEC_K),
             ("cached_conv", hcfg, hparams, "cached_conv", 0),
             ("attention_kv", tcfg, tparams, "distilled", 0)):
-        m = _stream_case(cfg, params, mode, spec_k=spec,
-                         draft_order=DRAFT_ORDER if spec else None)
+        m = _stream_case(cfg, params, mode, spec_k=spec)
         results["modes"][label] = m
-        extra = (f" acc={m['acceptance_rate']:.2f}"
-                 f" tok_per_round={m['tokens_per_slot_round']:.2f}"
-                 if spec else "")
+        extra = ""
+        if "spec_k" in m:
+            extra = (f" spec=k{m['spec_k']}/d{m['draft_order']}"
+                     f"/b{m['spec_branch']}")
+            if m.get("acceptance_rate") is not None:
+                extra += f" acc={m['acceptance_rate']:.2f}"
+            if m.get("tokens_per_slot_round") is not None:
+                extra += f" tok_per_round={m['tokens_per_slot_round']:.2f}"
+        elif spec:
+            extra = " spec=off(autotune)"
         out(row(f"serve_stream/{label}", m["wall_s"] * 1e6,
                 f"tok_s={m['tok_per_s']:.0f} "
                 f"decode_tok_s={m['decode_tok_per_s']:.0f} "
+                f"sat_decode_tok_s={m['decode_sat_tok_per_s']:.0f} "
                 f"p50_ms={m['p50_latency_s'] * 1e3:.1f} "
                 f"p99_ms={m['p99_latency_s'] * 1e3:.1f} "
                 f"p50_ttft_ms={m['p50_ttft_s'] * 1e3:.1f} "

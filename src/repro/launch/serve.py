@@ -44,6 +44,10 @@ from repro.serve.scheduler import (ContinuousBatchingEngine, SamplingParams,
 from repro.train.checkpoint import Checkpointer
 
 
+def _spec_k_arg(v: str):
+    return v if v == "auto" else int(v)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -85,14 +89,20 @@ def main():
     ap.add_argument("--prefills-per-step", type=int, default=2,
                     help="max admissions per tick == bucketed prefill batch")
     # self-speculative decoding (serve/speculative.py)
-    ap.add_argument("--spec-k", type=int, default=0,
+    ap.add_argument("--spec-k", type=_spec_k_arg, default=0,
                     help="speculative decoding: draft this many tokens per "
                          "slot per tick with the low-order modal truncation "
                          "of the serving SSM and verify them in one "
-                         "multi-token step (0 disables)")
+                         "multi-token step (0 disables). 'auto' runs the "
+                         "construction-time autotune sweep and adopts the "
+                         "measured winner (or disables speculation)")
     ap.add_argument("--draft-order", type=int, default=None,
                     help="real state dim of the draft's modal truncation "
                          "(default: half the serving distill order)")
+    ap.add_argument("--spec-branch", type=int, default=1,
+                    help="top-k tree drafts: draft this many chains per "
+                         "slot (branching once at depth 0) and verify them "
+                         "all in one call (1 = single chain)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -145,12 +155,17 @@ def _serve_stream(params, cfg, args):
                                    overlap=not args.sync_loop,
                                    max_prefills_per_step=args.prefills_per_step,
                                    spec_k=args.spec_k,
-                                   draft_order=args.draft_order)
+                                   draft_order=args.draft_order,
+                                   spec_branch=args.spec_branch)
+    if eng.spec_report is not None:
+        print(f"[serve] autotune sweep (spec_k=auto):\n"
+              f"{eng.spec_report.pretty()}")
+    spec_desc = (f", spec_k={eng._spec_k}" if eng._spec else "")
     print(f"[serve] warming up prompt lengths {plens} "
           f"({'bucketed' if not args.no_bucket else 'exact-length'} prefill"
           f"{', chunk=%d' % args.chunk if args.chunk else ''}, "
           f"{'overlapped' if not args.sync_loop else 'sync'} loop"
-          f"{', spec_k=%d' % args.spec_k if args.spec_k else ''}) ...")
+          f"{spec_desc}) ...")
     eng.warmup(plens)
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                               top_p=args.top_p)
@@ -168,12 +183,17 @@ def _serve_stream(params, cfg, args):
           f"p99={m['p99_latency_s']*1e3:.1f}ms  "
           f"ttft p50={m['p50_ttft_s']*1e3:.1f}ms "
           f"p99={m['p99_ttft_s']*1e3:.1f}ms")
-    if args.spec_k:
+    if eng._spec:
         from repro.serve.metrics import speculative_summary
-        s = speculative_summary(eng.stats, args.spec_k)
-        print(f"[serve] speculative: acceptance={s['acceptance_rate']:.2f} "
-              f"tokens/slot-round={s['tokens_per_slot_round']:.2f} "
-              f"(draft order {eng.draft_order}, K={args.spec_k})")
+        s = speculative_summary(eng.stats)
+        acc = s["acceptance_rate"]
+        tpr = s["tokens_per_slot_round"]
+        print(f"[serve] speculative: "
+              f"acceptance={acc if acc is not None else float('nan'):.2f} "
+              f"tokens/slot-round="
+              f"{tpr if tpr is not None else float('nan'):.2f} "
+              f"(draft order {eng.draft_order}, K={eng._spec_k}, "
+              f"branch={eng._spec_branch})")
     print(f"[serve] scheduler stats: {eng.stats}")
     print(f"[serve] prefill compile stats: {eng.prefill_compile_stats()}")
 

@@ -1190,6 +1190,26 @@ def write_cache_slots(pool, multi, slots):
     return out
 
 
+def gather_cache_rows(cache, rows):
+    """Gather batch rows `rows` (R,) int32 from a pooled per-slot cache (or a
+    `decode_chunk(collect_states=True)` aux, which shares the same axis
+    conventions: group leaves carry a leading layer axis so their batch axis
+    is 1; remainder leaves and `pos` use axis 0). Rows may repeat — the tree
+    speculative verifier replicates each slot once per draft branch
+    (`rows = repeat(arange(B), branch)`) and later selects the winning
+    branch per slot (`rows = arange(B) * branch + winner`). jit-friendly
+    (traced `rows`)."""
+    rows = jnp.asarray(rows, jnp.int32)
+    out = {"groups": jax.tree.map(lambda x: jnp.take(x, rows, axis=1),
+                                  cache["groups"]),
+           "pos": jnp.take(jnp.asarray(cache["pos"], jnp.int32), rows,
+                           axis=0)}
+    if cache.get("rem"):
+        out["rem"] = jax.tree.map(lambda x: jnp.take(x, rows, axis=0),
+                                  cache["rem"])
+    return out
+
+
 def reset_cache_slot(pool, slot):
     """Zero row `slot` of a pooled cache (ring slot_pos rows to -1, pos 0)."""
     from jax.tree_util import DictKey, tree_map_with_path

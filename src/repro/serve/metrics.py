@@ -69,18 +69,26 @@ def jit_cache_size(fn) -> Optional[int]:
         return None
 
 
-def speculative_summary(stats, spec_k: int) -> dict:
+def speculative_summary(stats, spec_k: Optional[int] = None) -> dict:
     """Acceptance-rate report from an engine's `stats` dict: drafted vs
     accepted counts, the acceptance rate, and the mean emitted tokens per
-    (round, slot) — accepted drafts + 1 correction token."""
+    speculating (round, slot) — accepted drafts + 1 correction token.
+    Rates are None (JSON null) rather than NaN when nothing was drafted.
+
+    Slot-rounds come from the engine's dispatch-time `spec_slot_rounds`
+    counter when present — with per-slot adaptive windows the drafted count
+    no longer implies the round count. `spec_k` remains as a fallback
+    divisor for stats dicts from older runs."""
     drafted = int(stats.get("spec_drafted", 0))
     accepted = int(stats.get("spec_accepted", 0))
-    slot_rounds = drafted / spec_k if spec_k else 0.0
+    slot_rounds = stats.get("spec_slot_rounds")
+    if not slot_rounds:
+        slot_rounds = drafted / spec_k if spec_k else 0.0
     return {
         "spec_rounds": int(stats.get("spec_rounds", 0)),
         "spec_drafted": drafted,
         "spec_accepted": accepted,
-        "acceptance_rate": accepted / drafted if drafted else float("nan"),
+        "acceptance_rate": accepted / drafted if drafted else None,
         "tokens_per_slot_round": (accepted / slot_rounds + 1.0
-                                  if slot_rounds else float("nan")),
+                                  if slot_rounds else None),
     }

@@ -178,14 +178,25 @@ class ContinuousBatchingEngine:
         chunked prefill, one chunk per tick (None disables).
       * overlap        — async host loop: enqueue the next pooled decode
         before fetching the previous tick's tokens.
-      * spec_k         — self-speculative decoding: each tick drafts spec_k
-        tokens per slot with a low-order modal truncation of the serving SSM
-        (one fused K-step executable) and verifies them all in ONE
-        multi-token step of the full-fidelity model, committing the longest
-        accepted prefix + a correction token (serve/speculative.py).
-        `draft_order` sets the draft's real state dim (default: half the
-        serving order); `draft_model=(params, cfg)` overrides the draft
-        entirely (testing). Requests can opt out per-request (Request.spec).
+      * spec_k         — self-speculative decoding: each tick drafts up to
+        spec_k tokens per slot with a low-order modal truncation of the
+        serving SSM (one fused K-step executable) and verifies them all in
+        ONE multi-token step of the full-fidelity model, committing the
+        longest accepted prefix + a correction token (serve/speculative.py).
+        spec_k="auto" runs a construction-time autotune sweep
+        (`speculative.autotune_spec`) that measures candidate
+        (spec_k, draft_order, branch) configs against plain decode under a
+        saturated workload and adopts the winner — or disables speculation
+        when nothing beats plain by `spec_margin`; the report lands in
+        `self.spec_report`. `draft_order` sets the draft's real state dim
+        (default: half the serving order); `spec_branch >= 2` drafts a
+        top-k token tree instead of a chain; `spec_adapt` (default on)
+        drives per-slot windows from each request's running acceptance
+        (`speculative.SlotSpecController`) — shrinking K, disabling
+        speculation per slot, and probing it back on — with per-depth
+        compiled executables so a narrow round costs a narrow round.
+        `draft_model=(params, cfg)` overrides the draft entirely (testing).
+        Requests can opt out per-request (Request.spec).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
@@ -194,7 +205,10 @@ class ContinuousBatchingEngine:
                  max_prefills_per_step: int = 1, reset_on_evict: bool = False,
                  bucket_prompts: bool = True, min_bucket: int = 8,
                  prefill_chunk: Optional[int] = None, overlap: bool = True,
-                 spec_k: int = 0, draft_order: Optional[int] = None,
+                 spec_k=0, draft_order: Optional[int] = None,
+                 spec_branch: int = 1, spec_adapt=True,
+                 spec_candidates: Optional[Sequence[Any]] = None,
+                 spec_margin: float = 0.05,
                  draft_model: Optional[Tuple[Any, ModelConfig]] = None,
                  clock: Callable[[], float] = time.monotonic):
         if mode not in ("distilled", "cached_conv"):
@@ -257,8 +271,24 @@ class ContinuousBatchingEngine:
         self._finalize = (jitted_finalize_prefill(cfg, max_len, cache_kind)
                           if prefill_chunk else None)
         # --- self-speculative decoding (serve/speculative.py) ---
+        self.spec_report = None
+        if isinstance(spec_k, str):
+            if spec_k != "auto":
+                raise ValueError(f"spec_k must be an int or 'auto', got "
+                                 f"{spec_k!r}")
+            from repro.serve import speculative as spec_mod
+            self.spec_report = spec_mod.autotune_spec(
+                params, cfg, mode=mode, n_slots=n_slots, max_len=max_len,
+                ctx=ctx, seed=seed, candidates=spec_candidates,
+                margin=spec_margin, draft_model=draft_model)
+            ch = self.spec_report.chosen
+            spec_k = ch.spec_k if ch is not None else 0
+            if ch is not None:
+                draft_order = ch.draft_order
+                spec_branch = ch.branch
         self._spec_k = int(spec_k)
         self._spec = self._spec_k > 0
+        self._spec_branch = int(spec_branch)
         self.draft_cache = None
         # native (distilled) serving: the draft's truncated modes are a
         # subset of the serving state, so the draft reads the serving cache
@@ -266,9 +296,11 @@ class ContinuousBatchingEngine:
         # cached-conv serving keeps a separate native draft pool: that is
         # the paper's classic pair (exact Lemma-2.1 target, O(d) draft).
         self._draft_shared = cache_kind == "native"
+        self._spec_ctl = None
         if self._spec:
             from repro.serve import speculative as spec_mod
-            spec_mod.validate_spec_config(cfg, self._spec_k)
+            spec_mod.validate_spec_config(cfg, self._spec_k,
+                                          branch=self._spec_branch)
             d_ord = (draft_order if draft_order is not None else
                      (cfg.hyena.distill_order // 2 if cfg.hyena else 0))
             self.draft_order = d_ord
@@ -283,8 +315,23 @@ class ContinuousBatchingEngine:
                     spec_mod.make_draft_params(params, cfg, d_ord,
                                                fit_len=min(max_len, 2048),
                                                embed=self._draft_shared)
-            self._spec_round = spec_mod.jitted_spec_round(
-                cfg, self._draft_cfg, self._spec_k, self._draft_shared, ctx)
+            # per-depth executables: a controller-shrunk window dispatches
+            # the smallest covering depth instead of masking inside the
+            # full-K one, so a narrow round costs a narrow round
+            self._spec_levels = spec_mod.spec_round_levels(self._spec_k)
+            self._spec_rounds = {
+                L: spec_mod.jitted_spec_round(cfg, self._draft_cfg, L,
+                                              self._draft_shared, ctx,
+                                              branch=self._spec_branch)
+                for L in self._spec_levels}
+            self._spec_round = self._spec_rounds[self._spec_k]
+            if spec_adapt:
+                # spec_adapt may be a SpecControllerConfig to override the
+                # control-law knobs (tests shrink probe_every/min_rounds)
+                ctl_cfg = (spec_adapt if isinstance(
+                    spec_adapt, spec_mod.SpecControllerConfig) else None)
+                self._spec_ctl = spec_mod.SlotSpecController(
+                    n_slots, self._spec_k, ctl_cfg)
             if not self._draft_shared:
                 self.draft_cache, _ = unzip(
                     init_cache(self._draft_cfg, n_slots, max_len,
@@ -310,6 +357,13 @@ class ContinuousBatchingEngine:
                                     self._base_key.dtype)
         self._tok_idx = jnp.zeros((n_slots,), jnp.int32)
         self._spec_len = jnp.ones((n_slots,), jnp.int32)
+        # host mirror of _spec_len plus a shadow of what the device holds:
+        # admission/eviction scatters keep both in sync; controller window
+        # changes mark the mirror dirty and _sync_spec_len uploads the whole
+        # vector once per change (no per-slot device scatters on the hot
+        # path, no recompiles — the executables take spec_len as data)
+        self._spec_win = np.ones(n_slots, np.int32)
+        self._spec_win_dev = self._spec_win.copy()
         self._admit_sample = _jitted("admit_sample", _admit_sample)
         self._stream_sample = _jitted("stream_sample", _stream_sample)
         self._clear_meta = _jitted("clear_slot_meta", _clear_slot_meta)
@@ -324,7 +378,9 @@ class ContinuousBatchingEngine:
                                       "decode_steps": 0, "prefills": 0,
                                       "prefill_calls": 0, "chunk_steps": 0,
                                       "spec_rounds": 0, "spec_drafted": 0,
-                                      "spec_accepted": 0}
+                                      "spec_accepted": 0,
+                                      "spec_slot_rounds": 0,
+                                      "spec_window_syncs": 0}
 
     # ------------------------------------------------------------------
     # request intake
@@ -511,10 +567,30 @@ class ContinuousBatchingEngine:
                 self.draft_cache = self._reset_slot(self.draft_cache, 0)
             warm_admission_ops(1, logits)
         if self._spec:
-            # one speculative round: fused draft scan + verify/commit
-            self._retire(self._dispatch_spec())
-            self.stats["decode_steps"] -= 1       # warmup doesn't count
-            self.stats["spec_rounds"] -= 1
+            # one speculative round (fused draft scan + verify/commit) per
+            # compiled depth level, so a controller-shrunk window never
+            # compiles mid-run; slots are all idle here, so the garbage
+            # advance is ignored exactly like the plain-decode warm tick
+            for L in self._spec_levels:
+                (self.cache, new_draft, _, _, self._last, self._tok_idx) = \
+                    self._spec_rounds[L](
+                        self.params, self._draft_params, self.cache,
+                        self._last, self._spec_len,
+                        None if self._draft_shared else self.draft_cache,
+                        temperature=self._temps, top_k=self._top_ks,
+                        top_p=self._top_ps, slot_keys=self._slot_keys,
+                        tok_idx=self._tok_idx,
+                        conv_filters=self._conv_filters)
+                if not self._draft_shared:
+                    self.draft_cache = new_draft
+            # the engine falls back to the plain pooled decode whenever no
+            # live slot speculates (all windows 1) — warm that path too
+            self.cache, logits = self._decode(self.params, self.cache,
+                                              self._last[:, None],
+                                              conv_filters=self._conv_filters)
+            self._stream_sample(self._slot_keys, self._tok_idx,
+                                logits[:, 0, :], self._temps, self._top_ks,
+                                self._top_ps)
             jax.block_until_ready((self.cache, self.draft_cache))
         else:
             self.cache, logits = self._decode(self.params, self.cache,
@@ -553,34 +629,66 @@ class ContinuousBatchingEngine:
             self._top_ks, self._top_ps)
         self._last = nxt
         self.stats["decode_steps"] += 1
-        snapshot = [(int(b), self.slots[b]) for b in np.nonzero(self.active)[0]]
+        snapshot = [(int(b), self.slots[b], 1)
+                    for b in np.nonzero(self.active)[0]]
         try:
             nxt.copy_to_host_async()           # double-buffered transfer
         except AttributeError:
             pass
         return (snapshot, nxt, None)
 
+    def _sync_spec_len(self) -> None:
+        """Upload the per-slot window vector when the controller changed it.
+        One whole-vector transfer, no recompile (spec_len is data)."""
+        if not np.array_equal(self._spec_win, self._spec_win_dev):
+            self._spec_len = jnp.asarray(self._spec_win, jnp.int32)
+            self._spec_win_dev[:] = self._spec_win
+            self.stats["spec_window_syncs"] += 1
+
     def _dispatch_spec(self):
         """Enqueue one speculative round — fused K-step draft scan (on the
         serving cache itself for the shared-state draft, else on the draft
         pool; the scan's advanced state is discarded) + multi-token verify,
         acceptance, rollback and replay — as ONE device dispatch per up to
-        spec_k + 1 tokens per slot."""
+        window-1 + 1 tokens per slot. The controller picks each slot's
+        window first; the round then runs the smallest compiled depth
+        covering the widest live window, or falls back to the plain pooled
+        decode when no live slot speculates this tick. Drafted-token stats
+        are counted HERE, at dispatch — a slot evicted before its round
+        retires still spent the draft work (the accounting bug the
+        retire-time counter had)."""
+        act = np.nonzero(self.active)[0]
+        if self._spec_ctl is not None:
+            for b in act:
+                self._spec_win[b] = self._spec_ctl.on_round(int(b))
+        need = int(max((self._spec_win[b] for b in act), default=1)) - 1
+        if need <= 0:
+            return self._dispatch_decode()
+        self._sync_spec_len()
+        K_r = next(L for L in self._spec_levels if L >= need)
         (self.cache, new_draft, emitted, n_emit, last, tok_idx) = \
-            self._spec_round(self.params, self._draft_params, self.cache,
-                             self._last, self._spec_len,
-                             None if self._draft_shared else self.draft_cache,
-                             temperature=self._temps,
-                             top_k=self._top_ks, top_p=self._top_ps,
-                             slot_keys=self._slot_keys,
-                             tok_idx=self._tok_idx,
-                             conv_filters=self._conv_filters)
+            self._spec_rounds[K_r](
+                self.params, self._draft_params, self.cache,
+                self._last, self._spec_len,
+                None if self._draft_shared else self.draft_cache,
+                temperature=self._temps,
+                top_k=self._top_ks, top_p=self._top_ps,
+                slot_keys=self._slot_keys,
+                tok_idx=self._tok_idx,
+                conv_filters=self._conv_filters)
         if not self._draft_shared:
             self.draft_cache = new_draft
         self._last, self._tok_idx = last, tok_idx
         self.stats["decode_steps"] += 1
         self.stats["spec_rounds"] += 1
-        snapshot = [(int(b), self.slots[b]) for b in np.nonzero(self.active)[0]]
+        snapshot = []
+        for b in act:
+            req = self.slots[b]
+            win = int(self._spec_win[b])
+            if req is not None and req.spec and win > 1:
+                self.stats["spec_drafted"] += win - 1
+                self.stats["spec_slot_rounds"] += 1
+            snapshot.append((int(b), req, win))
         try:
             emitted.copy_to_host_async()
             n_emit.copy_to_host_async()
@@ -601,9 +709,11 @@ class ContinuousBatchingEngine:
         toks = np.asarray(toks_dev)
         n_emit = None if n_emit_dev is None else np.asarray(n_emit_dev)
         emitted = 0
-        for b, req in snapshot:
+        for b, req, win in snapshot:
             # slot may have been evicted (and even re-admitted) since this
-            # tick was dispatched — its speculative token is dropped
+            # tick was dispatched — its speculative token is dropped (the
+            # round's drafted tokens were already counted at dispatch, so
+            # the acceptance denominator keeps the wasted work)
             if self.slots[b] is not req or req.status != RUNNING:
                 continue
             if n_emit is None:
@@ -618,14 +728,19 @@ class ContinuousBatchingEngine:
                 emitted += 1
                 if self.slots[b] is not req or req.status != RUNNING:
                     break                      # evicted mid-speculation
-            if req.spec:
+            if req.spec and win > 1:
                 # count only DELIVERED accepted drafts: tokens truncated by
                 # an EOS/max-tokens eviction never reached the request. A
                 # full delivery ends with the correction token (applied - 1
                 # drafts); a truncated one delivered accepted drafts only.
-                self.stats["spec_drafted"] += self._spec_k
                 self.stats["spec_accepted"] += (applied - 1 if applied == n
                                                 else applied)
+                if self._spec_ctl is not None and self.slots[b] is req:
+                    # feed the controller the round's raw acceptance (n - 1
+                    # of win - 1 drafts accepted, eviction or not); skip if
+                    # the request just finished — its slot state is reset
+                    self._spec_win[b] = self._spec_ctl.observe(
+                        b, win - 1, n - 1)
         return emitted
 
     # ------------------------------------------------------------------
@@ -754,6 +869,13 @@ class ContinuousBatchingEngine:
         toks_h = np.asarray(toks)
         now = self._clock()
         for j, (req, slot) in enumerate(zip(reqs, slots)):
+            # host mirror + shadow of the device window vector stay in sync
+            # with the _meta scatter above (no upload needed this tick)
+            self._spec_win[slot] = slen[j]
+            self._spec_win_dev[slot] = slen[j]
+            if self._spec_ctl is not None:
+                self._spec_ctl.admit(slot,
+                                     enabled=bool(self._spec and req.spec))
             req.status = RUNNING
             req.slot = slot
             if math.isnan(req.t_admitted):
@@ -854,6 +976,10 @@ class ContinuousBatchingEngine:
         (self._temps, self._top_ks, self._top_ps, self._spec_len) = \
             self._clear_meta(self._temps, self._top_ks, self._top_ps,
                              self._spec_len, slot)
+        self._spec_win[slot] = 1
+        self._spec_win_dev[slot] = 1
+        if self._spec_ctl is not None:
+            self._spec_ctl.evict(slot)
         self.finished.append(req)
         if self.reset_on_evict:
             self.cache = self._reset_slot(self.cache, slot)
@@ -910,8 +1036,8 @@ def run_request_stream(engine: ContinuousBatchingEngine,
     n_tokens = int(sum(len(r.tokens) for r in done))
     decode_wall = max(wall - engine.t_admit, 1e-9)
     return {
-        "n_requests": float(len(done)),
-        "n_tokens": float(n_tokens),
+        "n_requests": len(done),
+        "n_tokens": n_tokens,
         "wall_s": wall,
         "tok_per_s": n_tokens / wall if wall > 0 else float("inf"),
         "decode_tok_per_s": n_tokens / decode_wall,
@@ -919,4 +1045,96 @@ def run_request_stream(engine: ContinuousBatchingEngine,
         "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else math.nan,
         "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else math.nan,
         "p99_ttft_s": float(np.percentile(ttft, 99)) if len(ttft) else math.nan,
+    }
+
+
+def measure_saturated_decode(engine: ContinuousBatchingEngine, *,
+                             prompt_len: int = 32,
+                             target_tokens: Optional[int] = None,
+                             warmup_ticks: int = 4,
+                             max_ticks: int = 10_000,
+                             seed: int = 0,
+                             clock: Callable[[], float] = time.monotonic
+                             ) -> Dict[str, Any]:
+    """Steady-state decode throughput with every slot busy.
+
+    The stream benchmark's decode_tok_per_s is arrival-diluted (slots idle
+    between Poisson arrivals), which both understates throughput and adds
+    enough noise to drown a 30% speculation win. This fills all n_slots with
+    long greedy requests, burns `warmup_ticks` to get past compile/admission
+    transients, then times pure decode ticks until `target_tokens` have been
+    emitted (default 48 per slot). Probes get all the decode headroom
+    max_len allows; when that is short (small-max_len engines), warmup and
+    target shrink to fit so the window still measures real ticks instead of
+    breaking empty on a probe that finished during warmup.
+
+    Returns decode_tok_per_s plus the window's speculation deltas:
+    acceptance (None when nothing was drafted) and tokens_per_slot_round.
+    """
+    rng = np.random.default_rng(seed)
+    n_slots = engine.n_slots
+    headroom = engine.max_len - prompt_len - 1
+    if headroom < 2:
+        raise ValueError("prompt_len leaves no decode headroom")
+    # the earliest-admitted probe decodes through the other slots' admission
+    # ticks and the warmup ticks before the window opens; each tick commits
+    # at most spec_k+1 tokens
+    burst = (engine._spec_k + 1) if engine._spec else 1
+    while warmup_ticks > 1 and \
+            headroom - (n_slots - 1 + warmup_ticks) * burst < 4 * burst:
+        warmup_ticks -= 1
+    avail = headroom - (n_slots - 1 + warmup_ticks) * burst
+    if target_tokens is None:
+        target_tokens = 48 * n_slots
+    if avail > 0:
+        target_tokens = min(target_tokens, n_slots * avail)
+    probes = []
+    for rid in range(n_slots):
+        prompt = rng.integers(0, engine.cfg.vocab, size=prompt_len)
+        probes.append(Request(
+            rid=10_000_000 + rid, prompt=prompt.astype(np.int32),
+            max_new_tokens=headroom, sampling=GREEDY))
+        engine.submit_request(probes[-1])
+    # drain admission (prefill ticks) until all slots are decoding
+    ticks = 0
+    while int(engine.active.sum()) < n_slots:
+        if not engine.has_work or ticks >= max_ticks:
+            raise RuntimeError("saturation fill failed")
+        engine.step()
+        ticks += 1
+    for _ in range(warmup_ticks):
+        engine.step()
+    # count via the probe Request objects: their token lists survive
+    # eviction, so a probe hitting max_tokens mid-window still contributes
+    base = int(sum(len(r.tokens) for r in probes))
+    s0 = dict(engine.stats)
+    jax.block_until_ready(engine._last)
+    t0 = clock()
+    ticks = 0
+    tokens = 0
+    while tokens < target_tokens and ticks < max_ticks:
+        engine.step()
+        ticks += 1
+        tokens = int(sum(len(r.tokens) for r in probes)) - base
+        if int(engine.active.sum()) < n_slots:
+            break                               # a probe hit max_tokens
+    jax.block_until_ready(engine._last)
+    wall = max(clock() - t0, 1e-9)
+    drafted = engine.stats["spec_drafted"] - s0.get("spec_drafted", 0)
+    accepted = engine.stats["spec_accepted"] - s0.get("spec_accepted", 0)
+    rounds = (engine.stats.get("spec_slot_rounds", 0)
+              - s0.get("spec_slot_rounds", 0))
+    # flush: finish the oversized probe requests so the engine is reusable;
+    # the in-flight overlapped tick (if any) only carries tokens for the
+    # now-evicted probes, so its pending record is dropped too
+    for slot in range(n_slots):
+        if engine.slots[slot] is not None:
+            engine._evict(slot, "probe_done")
+    engine._pending = None
+    return {
+        "decode_tok_per_s": tokens / wall,
+        "tokens": tokens,
+        "ticks": ticks,
+        "acceptance": (accepted / drafted) if drafted > 0 else None,
+        "tokens_per_slot_round": (tokens / rounds) if rounds > 0 else None,
     }

@@ -36,17 +36,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Tuple
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import HYENA, LOCAL_ATTN, ModelConfig
 from repro.core.modal import ModalSSM, eval_filter
 from repro.core.truncation import modal_truncation
 from repro.models.layers import NOCTX, ShardCtx
-from repro.models.model import (decode_chunk, decode_step, layer_layout,
-                                restore_cache_slots, snapshot_cache_slots)
+from repro.models.model import (decode_chunk, decode_step, gather_cache_rows,
+                                layer_layout, restore_cache_slots,
+                                snapshot_cache_slots)
 from repro.serve.sampling import filter_logits, sample_token_slots
 
 # PRNG key-tree purpose tags (see module docstring / serve/README.md)
@@ -351,31 +354,192 @@ def spec_round(params, draft_params, cache, last, spec_len, draft_cache,
 
 
 # ---------------------------------------------------------------------------
+# Top-k tree drafts: `branch` root-to-leaf chains verified in ONE decode_chunk
+# ---------------------------------------------------------------------------
+def draft_tree(draft_params, draft_cache, last, K: int, branch: int,
+               cfg: ModelConfig, *, temperature, top_k, top_p, slot_keys,
+               tok_idx, ctx: ShardCtx = NOCTX):
+    """Draft a depth-K, branching-factor-`branch` token tree per slot,
+    flattened into `branch` root-to-leaf chains laid out slot-major over an
+    expanded batch of B * branch rows (row = slot * branch + c).
+
+    The tree branches ONCE, at depth 0: chain 0 draws with the slot's own
+    sampler and DRAW_TAG key stream — byte-identical to the single-chain
+    draft, which is what keeps greedy output token-identical and lets
+    sampled rows run standard rejection sampling against chain 0 — while
+    chains c >= 1 take the c-th-ranked (top-k) first token and continue
+    greedily. The branch point is where a draft most often diverges from the
+    target; covering the runners-up there lifts acceptance at the same
+    single verify call (over the replicated rows).
+
+    Returns (draft_toks (B*branch, K), draft_logits (B*branch, K, V)). The
+    advanced draft state is discarded, as in `draft_tokens`."""
+    B = last.shape[0]
+    b = branch
+    cache1, logits = decode_step(draft_params, draft_cache, last[:, None],
+                                 cfg, ctx=ctx)
+    lg0 = logits[:, 0, :]
+    keys0 = token_keys(slot_keys, tok_idx, DRAW_TAG)
+    chain0 = sample_token_slots(keys0, lg0, temperature=temperature,
+                                top_k=top_k, top_p=top_p)
+    _, ranked = jax.lax.top_k(lg0, b)                            # (B, b)
+    toks0 = jnp.concatenate([chain0[:, None], ranked[:, 1:].astype(jnp.int32)],
+                            axis=1)                              # (B, b)
+    rows = jnp.repeat(jnp.arange(B, dtype=jnp.int32), b)
+    cache_e = gather_cache_rows(cache1, rows)
+    last_e = toks0.reshape(B * b)
+    lg0_e = jnp.repeat(lg0, b, axis=0)       # depth-0 proposal distribution
+    # chain 0 keeps the slot's sampling params + key stream; side chains
+    # continue greedily (their depth-0 token already diversified the tree)
+    is_c0 = (jnp.arange(B * b, dtype=jnp.int32) % b) == 0
+    temp_e = jnp.where(is_c0, jnp.repeat(temperature, b), 0.0)
+    topk_e = jnp.where(is_c0, jnp.repeat(top_k, b), 0)
+    topp_e = jnp.where(is_c0, jnp.repeat(top_p, b), 1.0)
+    keys_e = jnp.repeat(slot_keys, b, axis=0)
+    ti_e = jnp.repeat(jnp.asarray(tok_idx, jnp.int32), b)
+    if K == 1:
+        return last_e[:, None], lg0_e[:, None]
+
+    def body(carry, j):
+        cache, tok = carry
+        cache, lg = decode_step(draft_params, cache, tok[:, None], cfg,
+                                ctx=ctx)
+        lg = lg[:, 0, :]
+        keys = token_keys(keys_e, ti_e + j, DRAW_TAG)
+        nxt = sample_token_slots(keys, lg, temperature=temp_e, top_k=topk_e,
+                                 top_p=topp_e)
+        return (cache, nxt), (nxt, lg)
+
+    (_, _), (toks, lgs) = jax.lax.scan(body, (cache_e, last_e),
+                                       jnp.arange(1, K, dtype=jnp.int32))
+    draft_toks = jnp.concatenate([last_e[:, None], jnp.moveaxis(toks, 0, 1)],
+                                 axis=1)
+    draft_lgs = jnp.concatenate([lg0_e[:, None], jnp.moveaxis(lgs, 0, 1)],
+                                axis=1)
+    return draft_toks, draft_lgs
+
+
+def spec_round_tree(params, draft_params, cache, last, spec_len, draft_cache,
+                    K: int, branch: int, cfg: ModelConfig,
+                    draft_cfg: ModelConfig, *, temperature, top_k, top_p,
+                    slot_keys, tok_idx, ctx: ShardCtx = NOCTX,
+                    conv_filters=None, select_commit: bool = False):
+    """One speculative round over a top-k token tree. All `branch` chains of
+    every slot are verified in ONE decode_chunk over a replicated scratch
+    pool (`gather_cache_rows` — the real pool is never advanced by a
+    rejected chain), the winning chain per slot is the one with the longest
+    window-capped greedy run (ties -> chain 0; sampled rows always take
+    chain 0, whose proposals came from the slot's own rejection-samplable
+    stream), and only the winner is committed: selection-commit gathers the
+    winner's per-position states from the verify aux, the generic path
+    replays the winner's accepted prefix on the real pool. branch=1 reduces
+    to the chain round (same acceptance, one extra gather).
+
+    Same signature/returns as `spec_round` plus `branch`."""
+    B = last.shape[0]
+    b = branch
+    draft_src = cache if draft_cache is None else draft_cache
+    draft_toks_e, draft_lgs_e = draft_tree(
+        draft_params, draft_src, last, K, b, draft_cfg,
+        temperature=temperature, top_k=top_k, top_p=top_p,
+        slot_keys=slot_keys, tok_idx=tok_idx, ctx=ctx)
+    rows = jnp.repeat(jnp.arange(B, dtype=jnp.int32), b)
+    tokens_e = jnp.concatenate([jnp.take(last, rows)[:, None], draft_toks_e],
+                               axis=1)                           # (B*b, C)
+    spec_len = jnp.asarray(spec_len, jnp.int32)
+    spec_len_e = jnp.take(spec_len, rows)
+    cache_e = gather_cache_rows(cache, rows)
+    if select_commit:
+        from repro.models.model import commit_cache_from_states
+        _, logits_e, aux_e = decode_chunk(params, cache_e, tokens_e, cfg,
+                                          active_len=spec_len_e, ctx=ctx,
+                                          conv_filters=conv_filters,
+                                          collect_states=True)
+    else:
+        _, logits_e = decode_chunk(params, cache_e, tokens_e, cfg,
+                                   active_len=spec_len_e, ctx=ctx,
+                                   conv_filters=conv_filters)
+    # winner = longest window-capped greedy run per slot (ties -> chain 0);
+    # sampled rows are pinned to chain 0 for distribution exactness
+    g_e = jnp.argmax(logits_e[:, :K, :], axis=-1).astype(jnp.int32)
+    run = jnp.sum(jnp.cumprod((draft_toks_e == g_e).astype(jnp.int32),
+                              axis=1), axis=1)
+    n_acc_e = jnp.minimum(run, spec_len_e - 1).reshape(B, b)
+    greedy_row = jnp.asarray(temperature, jnp.float32) <= 0.0
+    winner = jnp.where(greedy_row,
+                       jnp.argmax(n_acc_e, axis=1).astype(jnp.int32), 0)
+    widx = jnp.arange(B, dtype=jnp.int32) * b + winner
+    emitted, n_emit, n_acc, correction = verify_tokens(
+        jnp.take(logits_e, widx, axis=0), jnp.take(draft_lgs_e, widx, axis=0),
+        jnp.take(tokens_e, widx, axis=0), spec_len, temperature=temperature,
+        top_k=top_k, top_p=top_p, slot_keys=slot_keys, tok_idx=tok_idx)
+    tokens_w = jnp.take(tokens_e, widx, axis=0)
+    if select_commit:
+        new_cache = commit_cache_from_states(
+            gather_cache_rows(aux_e, widx), n_emit, cfg)
+    else:
+        # the verify ran on a scratch copy, so committing IS the replay —
+        # advance the untouched real pool by the winner's accepted prefix
+        new_cache, _ = decode_chunk(params, cache, tokens_w, cfg,
+                                    active_len=n_emit, ctx=ctx,
+                                    conv_filters=conv_filters,
+                                    need_logits=False)
+    new_draft_cache = None
+    if draft_cache is not None:
+        new_draft_cache, _ = decode_chunk(draft_params, draft_cache, tokens_w,
+                                          draft_cfg, active_len=n_emit,
+                                          ctx=ctx, need_logits=False)
+    return (new_cache, new_draft_cache, emitted, n_emit, correction,
+            jnp.asarray(tok_idx, jnp.int32) + n_emit)
+
+
+# ---------------------------------------------------------------------------
 # Jitted entry points (shared memo with the other serving executables)
 # ---------------------------------------------------------------------------
 def jitted_spec_round(cfg: ModelConfig, draft_cfg: ModelConfig, K: int,
-                      shared_draft: bool, ctx: ShardCtx = NOCTX):
+                      shared_draft: bool, ctx: ShardCtx = NOCTX,
+                      branch: int = 1):
     """Positional args: (params, draft_params, cache, last, spec_len,
     draft_cache) — pass draft_cache=None with shared_draft=True. The
     serving cache (and the draft pool, when separate) is donated. The
-    selection-commit is enabled automatically for archs that support it."""
+    selection-commit is enabled automatically for archs that support it.
+    branch >= 2 compiles the top-k tree round (`spec_round_tree`)."""
     from repro.models.model import supports_state_select
     from repro.serve.engine import _JIT_CACHE
     sel = shared_draft and supports_state_select(cfg)
-    key = ("spec_round", cfg, draft_cfg, K, shared_draft, id(ctx))
+    key = ("spec_round", cfg, draft_cfg, K, shared_draft, branch, id(ctx))
     if key not in _JIT_CACHE:
+        fn = (spec_round if branch <= 1
+              else functools.partial(spec_round_tree, branch=branch))
         _JIT_CACHE[key] = jax.jit(
-            functools.partial(spec_round, K=K, cfg=cfg, draft_cfg=draft_cfg,
+            functools.partial(fn, K=K, cfg=cfg, draft_cfg=draft_cfg,
                               ctx=ctx, select_commit=sel),
             donate_argnums=(2,) if shared_draft else (2, 5))
     return _JIT_CACHE[key]
 
 
-def validate_spec_config(cfg: ModelConfig, spec_k: int) -> None:
+def spec_round_levels(spec_k: int) -> List[int]:
+    """Compiled speculation depths: powers of two up to spec_k, plus spec_k.
+    The scheduler picks the smallest level covering the round's widest live
+    window, so a shrunk window actually saves draft/verify compute instead
+    of masking it."""
+    out = []
+    level = 1
+    while level < spec_k:
+        out.append(level)
+        level *= 2
+    out.append(spec_k)
+    return out
+
+
+def validate_spec_config(cfg: ModelConfig, spec_k: int,
+                         branch: int = 1) -> None:
     """Speculation horizon constraints: ring buffers must hold a whole
     verify window (snapshot regions would alias otherwise)."""
     if spec_k < 1:
         raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    if branch < 1:
+        raise ValueError(f"spec branch must be >= 1, got {branch}")
     if any(b == LOCAL_ATTN for b in cfg.blocks) and cfg.window > 0 \
             and cfg.window < spec_k + 1:
         raise ValueError(
@@ -384,3 +548,221 @@ def validate_spec_config(cfg: ModelConfig, spec_k: int) -> None:
     if cfg.enc_dec or cfg.frontend != "none":
         raise ValueError("speculative decoding does not support "
                          "enc-dec/frontend architectures")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance-driven control: per-slot online windows + per-engine autotuning
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SpecControllerConfig:
+    """Knobs of the per-slot speculation-window control law (see
+    SlotSpecController)."""
+    ema: float = 0.6            # weight on the PAST in the acceptance EMA
+    min_rounds: int = 3         # rounds at full depth before adapting
+    marginal: float = 0.25      # keep draft depth j while a^j >= marginal
+    disable_below: float = 0.08 # EMA acceptance below this -> spec off
+    probe_every: int = 32       # rounds between re-probes of an off slot
+
+
+class SlotSpecController:
+    """Per-slot speculation windows from each request's running acceptance.
+
+    Every speculative round feeds back (drafted, accepted) per slot;
+    the controller keeps an EMA `a` of the per-round acceptance fraction
+    (initialized optimistically at 1.0) and sets the slot's verify window:
+
+        a <  disable_below  ->  window 1 (speculation off for the slot)
+        otherwise           ->  1 + clip(floor(log marginal / log a), 1, K)
+
+    i.e. draft only to the depth where the expected chance a^j that the
+    whole prefix survives still clears `marginal` — a geometric-yield
+    cutoff, which is the right shape because a chain draft's value decays
+    geometrically in its depth. A disabled slot is re-probed with a
+    depth-1 round every `probe_every` ticks, so a request whose tail turns
+    predictable gets speculation back.
+
+    Correctness does not depend on any of this: the verify/commit path is
+    exact for EVERY per-slot window sequence (greedy output stays
+    token-identical to plain decoding; sampled output keeps its
+    distribution), so the controller is free to chase throughput only.
+    Host-side and O(n_slots) per round."""
+
+    def __init__(self, n_slots: int, spec_k: int,
+                 cfg: Optional[SpecControllerConfig] = None):
+        self.k = int(spec_k)
+        self.cfg = cfg or SpecControllerConfig()
+        self._a = np.ones(n_slots, np.float64)
+        self._rounds = np.zeros(n_slots, np.int64)
+        self._idle = np.zeros(n_slots, np.int64)
+        self._win = np.ones(n_slots, np.int32)
+        self._enabled = np.zeros(n_slots, bool)
+
+    def admit(self, slot: int, enabled: bool) -> int:
+        self._a[slot] = 1.0
+        self._rounds[slot] = 0
+        self._idle[slot] = 0
+        self._enabled[slot] = bool(enabled)
+        self._win[slot] = self.k + 1 if enabled else 1
+        return int(self._win[slot])
+
+    def evict(self, slot: int) -> None:
+        self._enabled[slot] = False
+        self._win[slot] = 1
+
+    def window(self, slot: int) -> int:
+        return int(self._win[slot])
+
+    def on_round(self, slot: int) -> int:
+        """Window to use for the round being dispatched. Off slots count
+        idle rounds and widen to a one-round depth-1 probe when due."""
+        if not self._enabled[slot]:
+            return 1
+        if self._win[slot] == 1:
+            self._idle[slot] += 1
+            if self._idle[slot] >= self.cfg.probe_every:
+                self._idle[slot] = 0
+                return 2
+        return int(self._win[slot])
+
+    def observe(self, slot: int, drafted: int, accepted: int) -> int:
+        """Feed back one round's (drafted, accepted) for the slot; returns
+        the slot's new window."""
+        if not self._enabled[slot] or drafted <= 0:
+            return int(self._win[slot])
+        c = self.cfg
+        frac = min(max(accepted / drafted, 0.0), 1.0)
+        self._a[slot] = c.ema * self._a[slot] + (1.0 - c.ema) * frac
+        self._rounds[slot] += 1
+        if self._rounds[slot] < c.min_rounds:
+            return int(self._win[slot])
+        a = float(self._a[slot])
+        if a < c.disable_below:
+            w = 1
+        elif a >= 0.999:
+            w = self.k + 1
+        else:
+            depth = int(math.floor(math.log(c.marginal) / math.log(a)))
+            w = 1 + max(1, min(self.k, depth))
+        self._win[slot] = w
+        return w
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecCandidate:
+    """One (spec_k, draft_order, branch) configuration the autotuner
+    measures. draft_order=None means the engine default (half the serving
+    distill order); draft_order >= distill_order is the full-order draft —
+    speculation degenerates into fused multi-token decode (acceptance 1),
+    which still wins when per-tick dispatch/sampler overhead dominates."""
+    spec_k: int
+    draft_order: Optional[int] = None
+    branch: int = 1
+
+    def label(self) -> str:
+        d = "half" if self.draft_order is None else str(self.draft_order)
+        out = f"k{self.spec_k}/d{d}"
+        if self.branch > 1:
+            out += f"/b{self.branch}"
+        return out
+
+
+@dataclasses.dataclass
+class AutotuneReport:
+    """Result of `autotune_spec`: the measured table and the chosen
+    candidate (None -> speculation off beats every candidate)."""
+    chosen: Optional[SpecCandidate]
+    plain: Dict[str, Any]
+    candidates: List[Tuple[SpecCandidate, Dict[str, Any]]]
+    margin: float
+
+    def table(self) -> List[Dict[str, Any]]:
+        rows = [{"config": "plain", **self.plain}]
+        for c, m in self.candidates:
+            rows.append({"config": c.label(), "spec_k": c.spec_k,
+                         "draft_order": c.draft_order, "branch": c.branch,
+                         **m})
+        return rows
+
+    def pretty(self) -> str:
+        lines = [f"{'config':>12s} {'decode tok/s':>12s} {'accept':>7s} "
+                 f"{'tok/round':>9s}"]
+        for r in self.table():
+            acc = r.get("acceptance")
+            tpr = r.get("tokens_per_slot_round")
+            lines.append(
+                f"{r['config']:>12s} {r.get('decode_tok_per_s', 0.0):12.1f} "
+                f"{acc if acc is not None else float('nan'):7.2f} "
+                f"{tpr if tpr is not None else float('nan'):9.2f}"
+                + ("   <- chosen" if self.chosen is not None
+                   and r["config"] == self.chosen.label() else ""))
+        if self.chosen is None:
+            lines.append(f"(no candidate beat plain decode by "
+                         f">{self.margin:.0%}: speculation disabled)")
+        return "\n".join(lines)
+
+
+def default_spec_candidates(cfg: ModelConfig) -> List[SpecCandidate]:
+    """Default autotune sweep. For LCSM archs: half- and full-order chain
+    drafts at two depths plus one top-k tree config; the full-order draft is
+    in the pool on purpose — with the state-sharing draft it is a pure
+    fused-multi-token-decode play and often the CPU winner. Non-LCSM archs
+    have no truncation axis, so only the depth varies."""
+    if cfg.hyena is not None:
+        full = cfg.hyena.distill_order
+        half = max(full // 2, 1)
+        return [SpecCandidate(4, full), SpecCandidate(4, half),
+                SpecCandidate(2, full), SpecCandidate(2, half, branch=2)]
+    return [SpecCandidate(4), SpecCandidate(2)]
+
+
+def autotune_spec(params, cfg: ModelConfig, *, mode: str = "distilled",
+                  n_slots: int = 4, max_len: int = 256,
+                  candidates: Optional[Sequence[SpecCandidate]] = None,
+                  margin: float = 0.05, seed: int = 0, ctx: ShardCtx = NOCTX,
+                  prompt_len: Optional[int] = None,
+                  target_tokens: Optional[int] = None,
+                  draft_model: Optional[Tuple[Any, ModelConfig]] = None,
+                  engine_kwargs: Optional[Dict[str, Any]] = None
+                  ) -> AutotuneReport:
+    """Measure plain decode and every candidate speculative config under a
+    saturated-slot workload (`measure_saturated_decode` — every slot busy,
+    pure decode ticks, so the number is not diluted by arrival gaps) and
+    pick the fastest. A candidate is chosen only if it beats plain decode
+    by more than `margin`; otherwise the report's `chosen` is None and the
+    engine should serve without speculation. Candidate engines share the
+    process-wide jit memo, so the sweep compiles each distinct
+    (K, branch) executable once, not once per candidate."""
+    from repro.serve.scheduler import (ContinuousBatchingEngine,
+                                       measure_saturated_decode)
+    if candidates is None:
+        candidates = default_spec_candidates(cfg)
+    if prompt_len is None:
+        prompt_len = max(8, min(32, max_len // 4))
+
+    def run(spec_k: int, draft_order=None, branch: int = 1) -> Dict[str, Any]:
+        eng = ContinuousBatchingEngine(
+            params, cfg, n_slots=n_slots, max_len=max_len, mode=mode,
+            ctx=ctx, seed=seed, spec_k=spec_k, draft_order=draft_order,
+            spec_branch=branch, spec_adapt=False, draft_model=draft_model,
+            **(engine_kwargs or {}))
+        eng.warmup((prompt_len,))
+        return measure_saturated_decode(eng, prompt_len=prompt_len,
+                                        target_tokens=target_tokens)
+
+    plain = run(0)
+    measured: List[Tuple[SpecCandidate, Dict[str, Any]]] = []
+    for c in candidates:
+        try:
+            m = run(c.spec_k, c.draft_order, c.branch)
+        except ValueError as e:        # e.g. ring window < verify horizon
+            m = {"decode_tok_per_s": 0.0, "error": str(e)}
+        measured.append((c, m))
+    chosen = None
+    if measured:
+        best, best_m = max(measured,
+                           key=lambda cm: cm[1].get("decode_tok_per_s", 0.0))
+        if best_m.get("decode_tok_per_s", 0.0) \
+                >= (1.0 + margin) * plain["decode_tok_per_s"]:
+            chosen = best
+    return AutotuneReport(chosen=chosen, plain=plain, candidates=measured,
+                          margin=margin)

@@ -1,0 +1,112 @@
+"""benchmarks/check_regression.py: the drop gate, the same-run spec-vs-plain
+gate (baseline-independent — the fix for the ratchet that preserved a
+regressed spec number once it was committed), old-file type tolerance, and
+the markdown job summary."""
+import json
+import sys
+
+import pytest
+
+from benchmarks.check_regression import main as check_main
+
+
+def _doc(modes):
+    return {"serve_stream": {"modes": modes}}
+
+
+def _mode(tok=1000.0, decode=None, sat=None, **extra):
+    m = {"tok_per_s": tok, "decode_tok_per_s": decode or tok}
+    if sat is not None:
+        m["decode_sat_tok_per_s"] = sat
+    m.update(extra)
+    return m
+
+
+def _run(tmp_path, base, new, *args):
+    bp, np_ = tmp_path / "base.json", tmp_path / "new.json"
+    bp.write_text(json.dumps(_doc(base)))
+    np_.write_text(json.dumps(_doc(new)))
+    argv = sys.argv
+    sys.argv = ["check_regression", "--baseline", str(bp), "--new", str(np_),
+                *args]
+    try:
+        return check_main()
+    finally:
+        sys.argv = argv
+
+
+def test_pass_and_drop(tmp_path):
+    base = {"distilled": _mode(1000), "distilled_spec": _mode(1100, sat=1300)}
+    good = {"distilled": _mode(980, sat=1000),
+            "distilled_spec": _mode(1050, sat=1200)}
+    assert _run(tmp_path, base, good) == 0
+    bad = {"distilled": _mode(500, sat=1000),
+           "distilled_spec": _mode(1050, sat=1200)}
+    assert _run(tmp_path, base, bad) == 1
+
+
+def test_spec_gate_is_same_run_not_baseline(tmp_path):
+    """A regressed spec number in the BASELINE must not grandfather a spec
+    mode that trails plain decode in the NEW run — and vice versa, spec
+    keeping up with plain passes regardless of the baseline's spec entry."""
+    base = {"distilled": _mode(1000, sat=2800),
+            "distilled_spec": _mode(550, sat=1500)}   # committed regression
+    trail = {"distilled": _mode(1000, sat=2800),
+             "distilled_spec": _mode(1000, sat=2000)}  # still trails plain
+    assert _run(tmp_path, base, trail) == 1
+    win = {"distilled": _mode(1000, sat=2800),
+           "distilled_spec": _mode(1000, sat=3500)}
+    assert _run(tmp_path, base, win) == 0
+    # ratio knob + disable
+    assert _run(tmp_path, base, win, "--spec-ratio", "1.5") == 1
+    assert _run(tmp_path, base, trail, "--spec-ratio", "0") == 0
+
+
+def test_sat_metric_preferred_with_stream_fallback(tmp_path):
+    """The gate compares decode_sat_tok_per_s when both modes report it and
+    falls back to the stream decode_tok_per_s for files that predate it."""
+    base = {"distilled": _mode(1000)}
+    # sat says spec wins even though the noisy stream number trails
+    new = {"distilled": _mode(1000, decode=900, sat=2800),
+           "distilled_spec": _mode(990, decode=800, sat=3300)}
+    assert _run(tmp_path, base, new) == 0
+    # no sat metric anywhere: stream decode decides
+    old_style = {"distilled": _mode(1000, decode=900),
+                 "distilled_spec": _mode(990, decode=800)}
+    assert _run(tmp_path, base, old_style) == 1
+
+
+def test_tolerates_old_float_counts_and_missing_modes(tmp_path):
+    base = {"distilled": {"tok_per_s": 1000.0, "n_requests": 16.0,
+                          "n_tokens": 516.0},
+            "weird": {"tok_per_s": "not-a-number"}}
+    new = {"distilled": _mode(1000, sat=2800), "weird": {"tok_per_s": None},
+           "distilled_spec": _mode(1000, sat=2900),
+           "extra_mode": _mode(5)}
+    assert _run(tmp_path, base, new) == 0
+
+
+def test_summary_markdown(tmp_path):
+    base = {"distilled": _mode(1000)}
+    new = {"distilled": _mode(1000, sat=2800),
+           "distilled_spec": _mode(1100, sat=3300, acceptance_rate=0.97,
+                                   tokens_per_slot_round=4.6, spec_k=4,
+                                   draft_order=16, spec_branch=1,
+                                   autotune=[{"config": "plain",
+                                              "decode_tok_per_s": 2800.0},
+                                             {"config": "k4/d16",
+                                              "decode_tok_per_s": 3300.0,
+                                              "acceptance": 1.0}])}
+    out = tmp_path / "summary.md"
+    assert _run(tmp_path, base, new, "--summary", str(out)) == 0
+    text = out.read_text()
+    assert "| distilled_spec " in text and "0.97" in text
+    assert "k4/d16" in text and "chosen: **k4/d16/b1**" in text
+    assert "all serving throughput checks passed" in text
+
+
+def test_missing_spec_mode_fails(tmp_path):
+    base = {"distilled": _mode(1000)}
+    new = {"distilled": _mode(1000, sat=2800)}
+    assert _run(tmp_path, base, new) == 1
+    assert _run(tmp_path, base, new, "--spec-ratio", "0") == 0

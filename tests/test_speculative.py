@@ -425,3 +425,234 @@ def test_embedded_draft_matches_compact_truncation(hyena_model):
                               dpc["R_im"], dpc["h0"]), L)
     np.testing.assert_allclose(np.asarray(he), np.asarray(hc), rtol=1e-5,
                                atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Top-k tree drafts
+# ---------------------------------------------------------------------------
+def _spec_round_inputs(cfg, params, mode, B=3, plen=8, seed=5):
+    """A small pooled decode state (B slots, all greedy) plus per-slot PRNG
+    metadata, built through prefill like the engine does."""
+    from repro.models.model import init_cache, prefill, write_cache_slots
+    from repro.distributed.sharding import unzip as _unzip
+    kind = "conv" if mode == "cached_conv" else "native"
+    cache, _ = _unzip(init_cache(cfg, B, MAX_LEN, cache_kind=kind,
+                                 per_slot=True))
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, plen)), jnp.int32)
+    c1, logits = prefill(params, toks, cfg, max_len=MAX_LEN, cache_kind=kind)
+    cache = write_cache_slots(cache, c1, jnp.arange(B, dtype=jnp.int32))
+    last = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    base = jax.random.PRNGKey(3)
+    keys = jnp.stack([jax.random.fold_in(base, r) for r in range(B)])
+    meta = dict(temperature=jnp.zeros((B,), jnp.float32),
+                top_k=jnp.zeros((B,), jnp.int32),
+                top_p=jnp.ones((B,), jnp.float32), slot_keys=keys,
+                tok_idx=jnp.zeros((B,), jnp.int32))
+    filters = (materialize_conv_filters(params, cfg, MAX_LEN)
+               if kind == "conv" else None)
+    return cache, last, meta, filters
+
+
+@pytest.mark.parametrize("mode,arch", [("distilled", "hyena"),
+                                       ("distilled", "attn")])
+def test_tree_branch1_equals_chain(hyena_model, attn_model, mode, arch):
+    """spec_round_tree at branching factor 1 is the chain round: same
+    emitted tokens, same per-row counts, same committed cache — on both the
+    selection-commit path (pure distilled Hyena) and the generic
+    snapshot/replay path (attention)."""
+    from repro.serve.speculative import (make_draft_params as _mk,
+                                         spec_round, spec_round_tree)
+    from repro.models.model import supports_state_select
+    cfg, params = {"hyena": hyena_model, "attn": attn_model}[arch]
+    dparams, dcfg = _mk(params, cfg, 4, embed=True)
+    cache, last, meta, filters = _spec_round_inputs(cfg, params, mode)
+    sel = supports_state_select(cfg)
+    spec_len = jnp.full((3,), 5, jnp.int32)
+    out_c = spec_round(params, dparams, cache, last, spec_len, None, 4, cfg,
+                       dcfg, conv_filters=filters, select_commit=sel, **meta)
+    out_t = spec_round_tree(params, dparams, cache, last, spec_len, None, 4,
+                            1, cfg, dcfg, conv_filters=filters,
+                            select_commit=sel, **meta)
+    for name, c, t in (("emitted", out_c[2], out_t[2]),
+                       ("n_emit", out_c[3], out_t[3]),
+                       ("correction", out_c[4], out_t[4]),
+                       ("tok_idx", out_c[5], out_t[5])):
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(t), err_msg=name)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+        out_c[0], out_t[0])
+
+
+@pytest.mark.parametrize("mode,arch", [
+    ("distilled", "hyena"), ("cached_conv", "hyena"),
+    pytest.param("distilled", "attn", marks=_slow)])
+def test_tree_branch2_greedy_identity(hyena_model, attn_model, mode, arch):
+    """Greedy output with branch-2 tree drafts is token-identical to plain
+    sequential generation: side chains only ever replace a rejected chain-0
+    suffix with a LONGER correct prefix of the same target argmax sequence."""
+    cfg, params = {"hyena": hyena_model, "attn": attn_model}[arch]
+    prompts = _prompts(cfg.vocab)[:3]
+    gens = GEN_LENS[:3]
+    want = _sequential_greedy(cfg, params, prompts, gens, mode)
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode=mode, spec_k=4, draft_order=4,
+                                   spec_branch=2)
+    reqs = [eng.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    eng.run()
+    for r, w in zip(reqs, want):
+        np.testing.assert_array_equal(np.asarray(r.tokens), w)
+    assert eng.stats["spec_rounds"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance-driven control: window law, identity under window changes
+# ---------------------------------------------------------------------------
+def test_controller_window_law():
+    from repro.serve.speculative import (SlotSpecController,
+                                         SpecControllerConfig)
+    ctl = SlotSpecController(2, 4, SpecControllerConfig(
+        ema=0.0, min_rounds=1, probe_every=3))   # ema=0: window from the
+    ctl.admit(0, True)                           # latest round alone
+    ctl.admit(1, False)                          # opted out
+    assert ctl.on_round(0) == 5 and ctl.on_round(1) == 1
+    assert ctl.observe(0, 4, 4) == 5             # full acceptance: full K
+    assert ctl.observe(0, 4, 1) < 5              # partial: shrink
+    assert ctl.observe(0, 4, 0) == 1             # none: disable
+    # disabled slot probes at depth 1 every probe_every rounds
+    probes = [ctl.on_round(0) for _ in range(6)]
+    assert probes.count(2) == 2 and set(probes) <= {1, 2}
+    # a successful probe re-enables
+    assert ctl.observe(0, 1, 1) > 1
+    # the opted-out slot never probes
+    assert all(ctl.on_round(1) == 1 for _ in range(8))
+
+
+def test_adaptive_windows_keep_identity(hyena_model):
+    """With the controller shrinking windows and toggling speculation off and
+    back on per slot (garbage draft -> acceptance collapses -> disable ->
+    depth-1 probes), greedy output stays token-identical to plain decoding
+    and the engine actually exercised window changes."""
+    from repro.serve.speculative import SpecControllerConfig
+    cfg, params = hyena_model
+    garbage, _ = unzip(init_params(jax.random.PRNGKey(123), cfg))
+    prompts = _prompts(cfg.vocab)
+    want = _sequential_greedy(cfg, params, prompts, GEN_LENS, "distilled")
+    eng = ContinuousBatchingEngine(
+        params, cfg, n_slots=2, max_len=MAX_LEN, spec_k=4, draft_order=4,
+        draft_model=(garbage, cfg),
+        spec_adapt=SpecControllerConfig(ema=0.0, min_rounds=1,
+                                        probe_every=2))
+    reqs = [eng.submit(p, max_new_tokens=g)
+            for p, g in zip(prompts, GEN_LENS)]
+    eng.run()
+    for r, w in zip(reqs, want):
+        np.testing.assert_array_equal(np.asarray(r.tokens), w)
+    assert eng.stats["spec_window_syncs"] > 0
+
+
+@pytest.mark.parametrize("mode,arch", [("cached_conv", "hyena"),
+                                       ("distilled", "local")])
+def test_adaptive_windows_other_cache_kinds(hyena_model, local_model, mode,
+                                            arch):
+    """Window changes mid-stream stay exact for the separate-draft-pool
+    (cached-conv) and ring-buffer (windowed attention) cache kinds too."""
+    from repro.serve.speculative import SpecControllerConfig
+    cfg, params = {"hyena": hyena_model, "local": local_model}[arch]
+    prompts = _prompts(cfg.vocab)[:3]
+    gens = GEN_LENS[:3]
+    want = _sequential_greedy(cfg, params, prompts, gens, mode)
+    eng = ContinuousBatchingEngine(
+        params, cfg, n_slots=2, max_len=MAX_LEN, mode=mode, spec_k=4,
+        draft_order=4,
+        spec_adapt=SpecControllerConfig(ema=0.3, min_rounds=1,
+                                        disable_below=0.5, probe_every=2))
+    reqs = [eng.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    eng.run()
+    for r, w in zip(reqs, want):
+        np.testing.assert_array_equal(np.asarray(r.tokens), w)
+
+
+# ---------------------------------------------------------------------------
+# Accounting: drafted tokens are counted at dispatch, not at retire
+# ---------------------------------------------------------------------------
+def test_eviction_before_apply_counts_drafted(hyena_model):
+    """A slot evicted between a speculative dispatch and its retire must
+    keep its drafted tokens in the denominator (the old retire-time counter
+    silently dropped them, inflating acceptance_rate)."""
+    cfg, params = hyena_model
+    p = _prompts(cfg.vocab)[0]
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=1, max_len=MAX_LEN,
+                                   spec_k=4, draft_order=8, spec_adapt=False,
+                                   overlap=False)
+    req = eng.submit(p, max_new_tokens=20)
+    eng.step()                                   # admits + first spec round
+    assert req.status == "running"
+    pending = eng._dispatch_spec()
+    drafted = eng.stats["spec_drafted"]
+    accepted = eng.stats["spec_accepted"]
+    assert drafted >= 4                          # this round already counted
+    eng._evict(req.slot, "test")                 # evicted before apply
+    assert eng._retire(pending) == 0             # tokens dropped...
+    assert eng.stats["spec_drafted"] == drafted  # ...but drafts still count
+    assert eng.stats["spec_accepted"] == accepted
+
+
+# ---------------------------------------------------------------------------
+# Autotuning
+# ---------------------------------------------------------------------------
+def test_autotune_margin(hyena_model):
+    """An unreachable margin yields chosen=None (speculation off); margin 0
+    with the full-order draft in the pool picks a winner. The report table
+    is JSON-serializable for BENCH_serve.json."""
+    import json
+    from repro.serve.speculative import SpecCandidate, autotune_spec
+    cfg, params = hyena_model
+    rep = autotune_spec(params, cfg, n_slots=2, max_len=MAX_LEN,
+                        prompt_len=8, target_tokens=24, margin=1e9,
+                        candidates=[SpecCandidate(2, 8)])
+    assert rep.chosen is None
+    assert "plain" in rep.pretty()
+    json.dumps(rep.table())
+    rep2 = autotune_spec(params, cfg, n_slots=2, max_len=MAX_LEN,
+                         prompt_len=8, target_tokens=24, margin=0.0,
+                         candidates=[SpecCandidate(2, 8),
+                                     SpecCandidate(2, 4, branch=2)])
+    assert rep2.chosen is not None
+    assert len(rep2.table()) == 3
+
+
+def test_engine_spec_auto(hyena_model):
+    """spec_k='auto' resolves to the measured winner (full-order draft in
+    the candidate pool -> speculation on) and still matches plain greedy
+    output; spec_k='bogus' is rejected."""
+    from repro.serve.speculative import SpecCandidate
+    cfg, params = hyena_model
+    prompts = _prompts(cfg.vocab)[:2]
+    want = _sequential_greedy(cfg, params, prompts, GEN_LENS[:2], "distilled")
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   spec_k="auto", spec_margin=0.0,
+                                   spec_candidates=[SpecCandidate(2, 8)])
+    assert eng.spec_report is not None
+    reqs = [eng.submit(p, max_new_tokens=g)
+            for p, g in zip(prompts, GEN_LENS[:2])]
+    eng.run()
+    for r, w in zip(reqs, want):
+        np.testing.assert_array_equal(np.asarray(r.tokens), w)
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                 spec_k="bogus")
+
+
+def test_stream_metrics_are_ints(hyena_model):
+    """run_request_stream emits integer request/token counts (BENCH_serve
+    type normalization)."""
+    from repro.serve.scheduler import (run_request_stream,
+                                       synthesize_request_stream)
+    cfg, params = hyena_model
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN)
+    stream = synthesize_request_stream(
+        np.random.default_rng(0), 3, rate=100.0, prompt_lens=(8, 12),
+        gen_tokens=(2, 4), vocab=cfg.vocab)
+    m = run_request_stream(eng, stream)
+    assert type(m["n_requests"]) is int and type(m["n_tokens"]) is int
