@@ -2,7 +2,7 @@
 # default, so `test-fast` is the tier-1 suite the driver runs).
 PY := PYTHONPATH=src python
 
-.PHONY: test-fast test-all test-slow bench bench-serve bench-check
+.PHONY: test-fast test-all test-slow bench bench-serve bench-check bench-chaos
 
 test-fast:
 	$(PY) -m pytest -x -q
@@ -30,3 +30,12 @@ bench-check:
 	$(MAKE) bench-serve
 	$(PY) -m benchmarks.check_regression \
 	    --baseline /tmp/BENCH_baseline.json --new BENCH_serve.json
+
+# chaos gate: the request stream under the standard seeded fault schedule
+# (benchmarks/bench_throughput.CHAOS_SCHEDULE) per cache kind. Fails if any
+# request never reached a terminal status; recovered-fault counters
+# (quarantines, re-prefills, watchdog trips, ...) are report-only. Runs
+# nightly in CI.
+bench-chaos:
+	$(PY) -m benchmarks.run --only serve_chaos --json BENCH_chaos.json
+	$(PY) -m benchmarks.check_regression --chaos BENCH_chaos.json

@@ -9,6 +9,13 @@ Request-stream rows (`stream_main`, suite "serve_stream"): Poisson arrivals
 with mixed prompt lengths through the continuous-batching scheduler; reports
 tokens/s and p50/p99 end-to-end latency per deployment mode (distilled,
 cached_conv, attention kv).
+
+Chaos rows (`chaos_main`, suite "serve_chaos", `make bench-chaos`): the same
+request stream under the standard seeded fault schedule (CHAOS_SCHEDULE) —
+state/conv/seq corruption, an injected dispatch fault, a host-loop stall and
+a forced deadline expiry. Reports completion counts and the engine's
+resilience counters; `check_regression --chaos` fails if any request never
+reached a terminal status (recovered-fault counts are report-only).
 """
 import jax
 import jax.numpy as jnp
@@ -139,3 +146,81 @@ def stream_main(out):
                 f"/{len(PROMPT_LENS)}lens "
                 f"compiles_in_run={m['steady_state_compiles']}" + extra))
     return {"serve_stream": results}
+
+
+# ---------------------------------------------------------------------------
+# Chaos benchmark: the request stream under a standard fault schedule
+# ---------------------------------------------------------------------------
+# One seeded schedule exercises every recovery path: NaN/Inf corruption of
+# the modal state, the conv tail, and the sequence buffers (quarantine +
+# re-prefill), an injected dispatch fault, a host-loop stall long enough to
+# trip the watchdog, and a forced deadline expiry. Tick numbers sit inside
+# the stream's busy window at the settings above so each event finds a
+# resident slot to hit.
+CHAOS_SCHEDULE = {
+    "seed": 0,
+    "events": [
+        {"tick": 4, "kind": "corrupt", "where": "state", "value": "nan"},
+        {"tick": 8, "kind": "raise"},
+        {"tick": 12, "kind": "corrupt", "where": "conv", "value": "inf"},
+        {"tick": 16, "kind": "stall", "duration_s": 0.05},
+        {"tick": 20, "kind": "expire"},
+        {"tick": 24, "kind": "corrupt", "where": "seq", "value": "nan"},
+    ],
+}
+CHAOS_WATCHDOG_S = 0.02
+CHAOS_SPEC_K = 4        # fixed config: the autotune sweep is not under test
+
+
+def _chaos_case(cfg, params, mode, spec_k=0):
+    from repro.serve.faults import FaultInjector
+    inj = FaultInjector(CHAOS_SCHEDULE["events"], seed=CHAOS_SCHEDULE["seed"])
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=N_SLOTS,
+                                   max_len=MAX_LEN, mode=mode,
+                                   max_prefills_per_step=PREFILL_BATCH,
+                                   spec_k=spec_k, fault_injector=inj,
+                                   watchdog_s=CHAOS_WATCHDOG_S)
+    eng.warmup(PROMPT_LENS)
+    stream = synthesize_request_stream(
+        np.random.default_rng(0), N_REQ, rate=RATE, prompt_lens=PROMPT_LENS,
+        gen_tokens=GEN_TOKENS, vocab=cfg.vocab)
+    m = run_request_stream(eng, stream)
+    return {
+        "n_requests_expected": N_REQ,
+        "n_completed": int(m["n_requests"]),
+        "n_ok": int(m["n_ok"]),
+        "n_errors": int(m["n_errors"]),
+        # requests that never reached a terminal status — the gated number
+        "unrecovered": N_REQ - int(m["n_requests"]),
+        "n_tokens": int(m["n_tokens"]),
+        "wall_s": m["wall_s"],
+        "tok_per_s": m["tok_per_s"],
+        "faults_fired": len(inj.log),
+        "recovery_events": len(eng.events),
+        "total_faults": eng.resilience.total_faults,
+        "resilience": m["resilience"],
+    }
+
+
+def chaos_main(out):
+    hcfg = hyena_cfg()
+    hparams = build(hcfg, distill=True)
+    tcfg = transformer_cfg()
+    tparams = build(tcfg)
+    results = {"schedule": CHAOS_SCHEDULE, "n_requests": N_REQ,
+               "watchdog_s": CHAOS_WATCHDOG_S, "modes": {}}
+    for label, cfg, params, mode, spec in (
+            ("distilled", hcfg, hparams, "distilled", 0),
+            ("distilled_spec", hcfg, hparams, "distilled", CHAOS_SPEC_K),
+            ("cached_conv", hcfg, hparams, "cached_conv", 0),
+            ("attention_kv", tcfg, tparams, "distilled", 0)):
+        m = _chaos_case(cfg, params, mode, spec_k=spec)
+        results["modes"][label] = m
+        out(row(f"serve_chaos/{label}", m["wall_s"] * 1e6,
+                f"completed={m['n_completed']}/{m['n_requests_expected']} "
+                f"ok={m['n_ok']} errors={m['n_errors']} "
+                f"unrecovered={m['unrecovered']} "
+                f"faults_absorbed={m['total_faults']} "
+                f"reprefills={m['resilience']['slot_reprefills']} "
+                f"poisoned={m['resilience']['poisoned']}"))
+    return {"serve_chaos": results}

@@ -17,6 +17,15 @@ entirely, but the mode must never trail plain decoding.
   PYTHONPATH=src python -m benchmarks.check_regression \
       --baseline BENCH_baseline.json --new BENCH_serve.json
 
+Chaos gate (`--chaos BENCH_chaos.json`, from `make bench-chaos`): every mode
+run under the standard fault schedule must have brought every submitted
+request to a terminal status — finishing with an error status after bounded
+retries (poisoned / deadline / rejected) counts as graceful degradation and
+passes; a request that never completed (or a mode that crashed out of the
+bench entirely) fails. Recovered-fault counters (quarantines, re-prefills,
+dispatch faults, watchdog trips) are reported in the summary table but not
+gated. `--chaos` can run standalone, without `--baseline`.
+
 A markdown comparison table (old -> new tok/s per mode, acceptance, tokens
 per round) is appended to `--summary` when given, else to the file named by
 $GITHUB_STEP_SUMMARY when set — so spec perf is visible on every PR's
@@ -95,6 +104,49 @@ def _summary_table(base: Dict[str, Dict[str, Any]],
     return lines
 
 
+def _chaos_table(chaos: Dict[str, Dict[str, Any]]) -> List[str]:
+    """Report-only chaos columns: recovered-fault counts per mode. The only
+    gated number is `unrecovered` (requests that never completed)."""
+    lines = ["", "### Chaos run (`make bench-chaos`)", "",
+             "| mode | completed | ok / error | unrecovered | quarantines "
+             "| reprefills | dispatch faults | deadline | watchdog "
+             "| poisoned |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for mode in sorted(chaos):
+        m = chaos[mode]
+        r = m.get("resilience", {})
+        lines.append(
+            f"| {mode} "
+            f"| {int(m.get('n_completed', 0))}"
+            f"/{int(m.get('n_requests_expected', 0))} "
+            f"| {int(m.get('n_ok', 0))} / {int(m.get('n_errors', 0))} "
+            f"| {int(m.get('unrecovered', 0))} "
+            f"| {int(r.get('health_failures', 0))} "
+            f"| {int(r.get('slot_reprefills', 0))} "
+            f"| {int(r.get('dispatch_faults', 0))} "
+            f"| {int(r.get('deadline_expiries', 0))} "
+            f"| {int(r.get('watchdog_trips', 0))} "
+            f"| {int(r.get('poisoned', 0))} |")
+    return lines
+
+
+def _check_chaos(chaos: Dict[str, Dict[str, Any]],
+                 failures: List[str]) -> None:
+    for mode in sorted(chaos):
+        m = chaos[mode]
+        expected = int(m.get("n_requests_expected", 0))
+        completed = int(m.get("n_completed", 0))
+        unrec = max(int(m.get("unrecovered", 0)), expected - completed)
+        status = "ok" if unrec == 0 else "UNRECOVERED"
+        print(f"[bench-check] chaos {mode:15s} completed "
+              f"{completed}/{expected} errors={int(m.get('n_errors', 0))} "
+              f"faults_absorbed={int(m.get('total_faults', 0))} {status}")
+        if unrec:
+            failures.append(
+                f"chaos {mode}: {unrec} request(s) never reached a terminal "
+                f"status under the fault schedule")
+
+
 def _write_summary(lines: List[str], path: Optional[str]) -> None:
     path = path or os.environ.get("GITHUB_STEP_SUMMARY")
     if not path:
@@ -105,10 +157,16 @@ def _write_summary(lines: List[str], path: Optional[str]) -> None:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True,
-                    help="committed BENCH_serve.json to compare against")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH_serve.json to compare against "
+                         "(optional when only --chaos is being checked)")
     ap.add_argument("--new", default="BENCH_serve.json",
                     help="freshly produced benchmark file")
+    ap.add_argument("--chaos", default=None,
+                    help="BENCH_chaos.json from `make bench-chaos`: fail if "
+                         "any mode left requests that never completed under "
+                         "the fault schedule (recovered-fault counters are "
+                         "report-only)")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="max tolerated fractional tok/s drop per mode")
     ap.add_argument("--spec-ratio", type=float, default=1.0,
@@ -120,13 +178,18 @@ def main() -> int:
                     help="append the markdown comparison table to this file "
                          "(default: $GITHUB_STEP_SUMMARY when set)")
     args = ap.parse_args()
+    if not args.baseline and not args.chaos:
+        ap.error("nothing to check: pass --baseline and/or --chaos")
 
-    with open(args.baseline) as f:
-        base = _modes(json.load(f))
-    with open(args.new) as f:
-        new = _modes(json.load(f))
+    base: Dict[str, Dict[str, Any]] = {}
+    new: Dict[str, Dict[str, Any]] = {}
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = _modes(json.load(f))
+        with open(args.new) as f:
+            new = _modes(json.load(f))
 
-    failures = []
+    failures: List[str] = []
     for mode, bm in sorted(base.items()):
         nm = new.get(mode)
         if nm is None:
@@ -171,7 +234,16 @@ def main() -> int:
                         f"{args.spec_ratio:.2f}x same-run distilled "
                         f"{plain_d:.1f}")
 
-    lines = _summary_table(base, new)
+    lines = _summary_table(base, new) if args.baseline else []
+    if args.chaos:
+        with open(args.chaos) as f:
+            chaos = json.load(f).get("serve_chaos", {}).get("modes", {})
+        if not chaos:
+            failures.append(f"{args.chaos} has no serve_chaos modes "
+                            f"(chaos bench crashed?)")
+        else:
+            _check_chaos(chaos, failures)
+            lines += _chaos_table(chaos)
     if failures:
         lines += ["", "**FAILED:**"] + [f"- {m}" for m in failures]
     else:

@@ -22,6 +22,7 @@ from benchmarks import (bench_distill, bench_kernels, bench_memory,
 SUITES = {
     "fig1.1_throughput": bench_throughput.main,
     "serve_stream": bench_throughput.stream_main,
+    "serve_chaos": bench_throughput.chaos_main,
     "fig5.3_prompt_scaling": bench_prompt_scaling.main,
     "fig5.4_memory": bench_memory.main,
     "sec5.4_state_dim": bench_state_dim.main,

@@ -103,6 +103,23 @@ def main():
                     help="top-k tree drafts: draft this many chains per "
                          "slot (branching once at depth 0) and verify them "
                          "all in one call (1 = single chain)")
+    # resilience (serve/README.md "Failure handling")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request end-to-end deadline; expired requests "
+                         "finish with ERROR status instead of queueing "
+                         "forever")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded-queue admission control: submissions past "
+                         "this queue depth are rejected with ERROR status")
+    ap.add_argument("--fault-schedule", type=str, default=None,
+                    help="JSON fault schedule (file path or inline) driving "
+                         "a seeded serve/faults.FaultInjector: corrupt slot "
+                         "state, raise in dispatch, stall the loop, expire "
+                         "deadlines")
+    ap.add_argument("--restore", type=str, default=None,
+                    help="resume from an engine checkpoint written by "
+                         "serve.checkpoint.save_engine (bit-exact for "
+                         "resident slots)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -147,6 +164,12 @@ def _serve_stream(params, cfg, args):
     else:
         plens = (max(args.prompt_len // 2, 4), args.prompt_len)
     max_len = max(plens) + args.gen
+    injector = None
+    if args.fault_schedule:
+        from repro.serve.faults import FaultInjector
+        injector = FaultInjector.from_json(args.fault_schedule)
+        print(f"[serve] fault schedule: {len(injector.events)} events "
+              f"(seed {injector.seed})")
     eng = ContinuousBatchingEngine(params, cfg, n_slots=args.slots,
                                    max_len=max_len, mode=args.mode,
                                    seed=args.seed,
@@ -156,7 +179,17 @@ def _serve_stream(params, cfg, args):
                                    max_prefills_per_step=args.prefills_per_step,
                                    spec_k=args.spec_k,
                                    draft_order=args.draft_order,
-                                   spec_branch=args.spec_branch)
+                                   spec_branch=args.spec_branch,
+                                   deadline_s=(args.deadline_ms / 1e3
+                                               if args.deadline_ms else None),
+                                   max_queue=args.max_queue,
+                                   fault_injector=injector)
+    if args.restore:
+        from repro.serve.checkpoint import restore_engine
+        restore_engine(eng, args.restore)
+        print(f"[serve] restored engine checkpoint {args.restore} "
+              f"(tick {eng._tick}, {eng.n_active} resident slots, "
+              f"{len(eng.queue)} queued)")
     if eng.spec_report is not None:
         print(f"[serve] autotune sweep (spec_k=auto):\n"
               f"{eng.spec_report.pretty()}")
@@ -196,6 +229,16 @@ def _serve_stream(params, cfg, args):
               f"branch={eng._spec_branch})")
     print(f"[serve] scheduler stats: {eng.stats}")
     print(f"[serve] prefill compile stats: {eng.prefill_compile_stats()}")
+    res = {k: v for k, v in m["resilience"].items() if v}
+    if res or m["n_errors"]:
+        print(f"[serve] resilience: {m['n_errors']} error completions, "
+              f"counters {res}")
+    if eng.events:
+        print(f"[serve] recovery events ({len(eng.events)}):")
+        for ev in eng.events:
+            detail = {k: v for k, v in ev.items()
+                      if k not in ("tick", "kind")}
+            print(f"  tick {ev['tick']:>5}  {ev['kind']:<16} {detail}")
 
 
 if __name__ == "__main__":

@@ -25,7 +25,7 @@ from repro.configs.base import ModelConfig
 from repro.models.layers import NOCTX, ShardCtx
 from repro.models.model import (decode_step, finalize_prefill_cache,
                                 materialize_conv_filters, prefill,
-                                prefill_from_cache)
+                                prefill_from_cache, slot_health)
 from repro.serve.sampling import sample_token
 
 # Shared jit memo: engines are cheap throwaway objects (tests/benchmarks
@@ -40,6 +40,27 @@ def jitted_decode_step(cfg: ModelConfig, ctx: ShardCtx = NOCTX):
     if key not in _JIT_CACHE:
         _JIT_CACHE[key] = jax.jit(
             functools.partial(decode_step, cfg=cfg, ctx=ctx),
+            donate_argnums=(1,))
+    return _JIT_CACHE[key]
+
+
+def _decode_step_guarded(params, cache, tokens, bound, *, cfg, ctx,
+                         conv_filters=None):
+    cache, logits = decode_step(params, cache, tokens, cfg=cfg, ctx=ctx,
+                                conv_filters=conv_filters)
+    return cache, logits, slot_health(cache, logits[:, 0, :], bound)
+
+
+def jitted_decode_step_guarded(cfg: ModelConfig, ctx: ShardCtx = NOCTX):
+    """Pooled decode step with the per-slot state-integrity reduction fused
+    into the same executable (`bound` is data — one compile covers every
+    margin). A separate jitted health call costs a whole extra host dispatch
+    per tick, which on CPU is ~25% of saturated decode throughput; fused,
+    the guard rides the decode dispatch for (nearly) free."""
+    key = ("decode_guarded", cfg, id(ctx))
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(
+            functools.partial(_decode_step_guarded, cfg=cfg, ctx=ctx),
             donate_argnums=(1,))
     return _JIT_CACHE[key]
 

@@ -1,0 +1,184 @@
+"""Deterministic, seeded fault injection for the serving engine.
+
+A `FaultInjector` holds a scripted schedule of `FaultEvent`s keyed by engine
+tick. The engine polls the injector at fixed points in its step loop and the
+injector replies with what to break this tick:
+
+  * ``corrupt`` — poison one resident slot's cache row (NaN/Inf into the
+    modal state, conv tail, or sequence/ring buffers) via
+    `corrupt_cache_slot`. Exercises the state-integrity guards + quarantine
+    path.
+  * ``raise``   — make the next dispatch raise `FaultError` *before* the
+    jitted call runs (so donated pool buffers stay valid on an injected
+    fault; a genuine in-flight failure is handled separately by the
+    engine's pool rebuild). Exercises dispatch-exception recovery.
+  * ``stall``   — sleep the host loop for `duration_s`. Exercises the tick
+    watchdog.
+  * ``expire``  — force one resident request's deadline into the past.
+    Exercises deadline eviction.
+
+Everything is deterministic: slot choice for events that don't pin one uses
+a counter-seeded `np.random.default_rng`, never wall clock, so a schedule
+replays identically run to run — the property the bit-exactness tests for
+unaffected slots rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+_KINDS = ("corrupt", "raise", "stall", "expire")
+_WHERES = ("state", "conv", "seq", "any")
+
+# leaf-name classification mirroring models.model._init_block_cache
+_WHERE_KEYS = {
+    "state": ("x_re", "x_im", "ssm", "h"),
+    "conv": ("conv",),
+    "seq": ("k", "v", "kv"),
+}
+
+
+class FaultError(RuntimeError):
+    """Raised by the injector in place of a dispatch (kind="raise")."""
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    tick: int                   # engine tick index at which to fire
+    kind: str                   # one of _KINDS
+    where: str = "state"        # corrupt: leaf class (see _WHERE_KEYS)
+    value: float = float("nan")  # corrupt: poison value (nan / +-inf / any)
+    slot: int = -1              # target slot; -1 = seeded pick among residents
+    duration_s: float = 0.0     # stall: host-loop sleep
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.kind == "corrupt" and self.where not in _WHERES:
+            raise ValueError(f"unknown corrupt target {self.where!r}")
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FaultEvent":
+        d = dict(d)
+        v = d.get("value")
+        if isinstance(v, str):          # JSON has no nan/inf literals
+            d["value"] = float(v)
+        return cls(**d)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        if not math.isfinite(d["value"]):
+            d["value"] = str(d["value"])
+        return d
+
+
+class FaultInjector:
+    """Scripted schedule of faults + a log of what actually fired."""
+
+    def __init__(self, events: Sequence[FaultEvent] = (), *, seed: int = 0):
+        self.events = sorted((e if isinstance(e, FaultEvent)
+                              else FaultEvent.from_dict(e) for e in events),
+                             key=lambda e: e.tick)
+        self.seed = int(seed)
+        self.log: List[Dict[str, Any]] = []
+
+    # -- (de)serialization -------------------------------------------------
+    @classmethod
+    def from_json(cls, text_or_path: str) -> "FaultInjector":
+        text = text_or_path
+        if not text.lstrip().startswith(("{", "[")):
+            with open(text_or_path) as f:
+                text = f.read()
+        doc = json.loads(text)
+        if isinstance(doc, list):
+            doc = {"events": doc}
+        return cls([FaultEvent.from_dict(d) for d in doc.get("events", [])],
+                   seed=doc.get("seed", 0))
+
+    def to_json(self) -> str:
+        return json.dumps({"seed": self.seed,
+                           "events": [e.to_dict() for e in self.events]})
+
+    # -- schedule queries (engine-facing) ----------------------------------
+    def _at(self, tick: int, kind: str) -> List[FaultEvent]:
+        return [e for e in self.events if e.tick == tick and e.kind == kind]
+
+    def corruptions(self, tick: int) -> List[FaultEvent]:
+        return self._at(tick, "corrupt")
+
+    def raise_if_scheduled(self, tick: int) -> None:
+        for e in self._at(tick, "raise"):
+            self.record(tick, "raise", slot=e.slot)
+            raise FaultError(f"injected dispatch fault at tick {tick}")
+
+    def stall_s(self, tick: int) -> float:
+        total = sum(e.duration_s for e in self._at(tick, "stall"))
+        if total:
+            self.record(tick, "stall", duration_s=total)
+        return total
+
+    def expirations(self, tick: int) -> List[FaultEvent]:
+        return self._at(tick, "expire")
+
+    def pick_slot(self, event: FaultEvent, tick: int,
+                  residents: Sequence[int]) -> Optional[int]:
+        """Event's pinned slot if resident, else a seeded deterministic pick
+        among residents; None when nothing is resident to fault."""
+        if event.slot >= 0:
+            return event.slot if event.slot in residents else None
+        if not residents:
+            return None
+        rng = np.random.default_rng((self.seed << 20) ^ tick)
+        return int(sorted(residents)[rng.integers(len(residents))])
+
+    def record(self, tick: int, kind: str, **detail) -> None:
+        self.log.append({"tick": tick, "kind": kind, **detail})
+
+    @property
+    def max_tick(self) -> int:
+        return max((e.tick for e in self.events), default=-1)
+
+
+def corrupt_cache_slot(cache, slot: int, where: str = "state",
+                       value: float = float("nan")):
+    """Poison slot `slot` of a raw pooled per-slot cache: set every element
+    of the matching leaves' slot row to `value`. Group leaves carry a
+    leading layer axis (batch axis 1); remainder leaves use axis 0. Only
+    float leaves are touched. If `where` names a leaf class the cache kind
+    doesn't have (e.g. "state" on an attention arch), falls back to "any"
+    so one standard schedule exercises every cache kind."""
+    keys = _WHERE_KEYS.get(where)      # None for "any"
+
+    def match(k, v) -> bool:
+        if not jnp.issubdtype(v.dtype, jnp.inexact):
+            return False
+        return keys is None or k in keys
+
+    def has_match(c) -> bool:
+        return any(match(k, v) for k, v in c.items())
+
+    blocks = list(cache["groups"].values()) + list(cache.get("rem") or [])
+    if keys is not None and not any(has_match(c) for c in blocks):
+        keys = None                    # fall back to "any"
+
+    def poison(c, batch_axis: int):
+        out = dict(c)
+        for k, v in c.items():
+            if not match(k, v):
+                continue
+            if batch_axis == 1:
+                out[k] = v.at[:, slot].set(value)
+            else:
+                out[k] = v.at[slot].set(value)
+        return out
+
+    out = {"groups": {lk: poison(lv, 1) for lk, lv in cache["groups"].items()},
+           "pos": cache["pos"]}
+    if "rem" in cache:
+        out["rem"] = [poison(rc, 0) for rc in cache["rem"]]
+    return out

@@ -69,6 +69,50 @@ def jit_cache_size(fn) -> Optional[int]:
         return None
 
 
+RESILIENCE_KEYS = (
+    "health_failures",      # device health bitvector flagged a slot
+    "slot_reprefills",      # quarantined slot re-prefilled from its tokens
+    "spec_demotions",       # slot demoted from speculation to plain decode
+    "engine_demotions",     # distilled engine demoted to exact cached-conv
+    "deadline_expiries",    # request evicted past its deadline
+    "rejected",             # admission refused: queue at capacity
+    "poisoned",             # request finished with error after max retries
+    "dispatch_faults",      # dispatch raised and was recovered
+    "watchdog_trips",       # host tick exceeded the watchdog latency
+    "checkpoint_saves",
+    "checkpoint_restores",
+)
+
+
+class ResilienceCounters:
+    """Resettable event counters for the engine's resilience layer. Extra
+    (non-standard) keys are allowed so tests / future paths can piggyback;
+    `snapshot()` always reports every standard key (zeros included) so
+    BENCH_serve.json columns stay stable across runs."""
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self._c = {k: 0 for k in RESILIENCE_KEYS}
+
+    def bump(self, key: str, n: int = 1) -> None:
+        self._c[key] = self._c.get(key, 0) + int(n)
+
+    def get(self, key: str) -> int:
+        return int(self._c.get(key, 0))
+
+    def snapshot(self) -> dict:
+        return {k: int(v) for k, v in self._c.items()}
+
+    @property
+    def total_faults(self) -> int:
+        """Faults the engine absorbed (recovered or degraded gracefully)."""
+        return sum(self.get(k) for k in ("health_failures", "dispatch_faults",
+                                         "deadline_expiries", "rejected",
+                                         "watchdog_trips"))
+
+
 def speculative_summary(stats, spec_k: Optional[int] = None) -> dict:
     """Acceptance-rate report from an engine's `stats` dict: drafted vs
     accepted counts, the acceptance rate, and the mean emitted tokens per

@@ -77,13 +77,25 @@ def sample_token_slots(key, logits, *, temperature, top_k, top_p):
     """
     B, V = logits.shape
     temperature = jnp.asarray(temperature, jnp.float32)
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # NaN-proof greedy: argmax over the raw logits with NaN masked to -inf,
+    # so a poisoned row yields a deterministic token (index 0 when the whole
+    # row is non-finite) instead of NaN-comparison-dependent junk
+    raw = jnp.where(jnp.isnan(logits), -jnp.inf, logits).astype(jnp.float32)
+    greedy = jnp.argmax(raw, axis=-1).astype(jnp.int32)
 
     def sample(_):
         lg = filter_logits(logits, temperature=temperature, top_k=top_k,
                            top_p=top_p)
+        # degenerate rows — filtering left no finite support (e.g. top_p=0)
+        # or NaN logits leaked through — would softmax to NaN probabilities;
+        # fall back to argmax over the raw logits for those rows
+        bad = (~jnp.any(jnp.isfinite(lg), axis=-1)
+               | jnp.any(jnp.isnan(lg), axis=-1))
         keys = key if key.ndim == 2 else jax.random.split(key, B)
-        sampled = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+        lg_safe = jnp.where(bad[:, None], 0.0, lg)
+        sampled = jax.vmap(jax.random.categorical)(keys,
+                                                   lg_safe).astype(jnp.int32)
+        sampled = jnp.where(bad, greedy, sampled)
         return jnp.where(temperature <= 0.0, greedy, sampled)
 
     # all-greedy fast path: skips the sort-based top-k/top-p filter (the

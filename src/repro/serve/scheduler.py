@@ -62,13 +62,16 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import unzip
 from repro.models.layers import NOCTX, ShardCtx
 from repro.models.model import (init_cache, init_prefill_cache,
-                                materialize_conv_filters, reset_cache_slot,
+                                materialize_conv_filters, modal_state_bound,
+                                reset_cache_slot, slot_health,
                                 write_cache_slot, write_cache_slots)
+from repro.serve.faults import FaultError, corrupt_cache_slot
+from repro.serve.metrics import ResilienceCounters
 from repro.serve.sampling import sample_token_slots
 from repro.serve.speculative import DRAW_TAG, token_keys
 
-QUEUED, PREFILLING, RUNNING, FINISHED = ("queued", "prefilling", "running",
-                                         "finished")
+QUEUED, PREFILLING, RUNNING, FINISHED, ERROR = (
+    "queued", "prefilling", "running", "finished", "error")
 
 _SLOT_JITS: Dict[str, Callable] = {}
 
@@ -110,6 +113,16 @@ def _stream_sample(slot_keys, tok_idx, logits, temps, top_ks, top_ps):
     return toks, tok_idx + 1
 
 
+def _slot_health_state(cache, bound):
+    """Spec-path guard: cache-state-only (the fused spec round does not
+    expose its verify logits). Covers the modal state and conv tails — the
+    distilled serving path — while sequence-buffer corruption in a
+    cached-conv spec engine surfaces as degenerate (argmax-fallback) tokens
+    rather than a tripped guard."""
+    B = jnp.asarray(cache["pos"]).shape[0]
+    return slot_health(cache, jnp.zeros((B, 1), jnp.float32), bound)
+
+
 def _clear_slot_meta(temps, top_ks, top_ps, spec_len, slot):
     """Reset a freed slot's sampling params and speculation window to the
     neutral values (greedy, window 1). Stale values on dead slots would
@@ -140,11 +153,15 @@ class Request:
     sampling: SamplingParams = GREEDY
     eos_id: Optional[int] = None
     spec: bool = True                        # opt out of speculative decode
+    deadline_s: Optional[float] = None       # end-to-end budget from submit
     # --- filled by the engine ---
     tokens: List[int] = dataclasses.field(default_factory=list)
     status: str = QUEUED
     slot: int = -1
     finish_reason: str = ""
+    retries: int = 0                         # quarantine re-prefill attempts
+    retry_at: int = 0                        # earliest tick for re-admission
+    admit_seq: int = -1                      # dispatch seq at latest admission
     t_submit: float = math.nan
     t_admitted: float = math.nan
     t_first_token: float = math.nan
@@ -161,6 +178,12 @@ class Request:
     @property
     def ttft(self) -> float:
         return self.t_first_token - self.t_submit
+
+    @property
+    def ok(self) -> bool:
+        """Completed normally (ERROR-status requests carry the failure in
+        finish_reason: "poisoned" / "deadline" / "rejected")."""
+        return self.status == FINISHED
 
 
 class ContinuousBatchingEngine:
@@ -197,6 +220,20 @@ class ContinuousBatchingEngine:
         compiled executables so a narrow round costs a narrow round.
         `draft_model=(params, cfg)` overrides the draft entirely (testing).
         Requests can opt out per-request (Request.spec).
+
+    Resilience knobs (serve/README.md "Failure handling"): `health_every`
+    runs the per-slot state-integrity guard every N ticks (0 disables; the
+    default of 2 amortizes the guard's reduction to a few percent of decode
+    — corruption is persistent state, so detection slips by at most one
+    tick, never escapes);
+    `state_margin` scales the pole-derived modal-norm bound; `max_retries` /
+    `retry_backoff_ticks` bound quarantine re-prefills before a request
+    completes with ERROR status; `demote_spec_after` turns a repeatedly
+    quarantined request's speculation off; `demote_engine_after` (opt-in)
+    falls the whole distilled engine back to the exact cached-conv path;
+    `deadline_s` / `max_queue` give per-request deadlines and bounded-queue
+    backpressure; `watchdog_s` flags slow host ticks; `fault_injector`
+    (serve/faults.FaultInjector) drives scripted chaos schedules.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
@@ -210,7 +247,15 @@ class ContinuousBatchingEngine:
                  spec_candidates: Optional[Sequence[Any]] = None,
                  spec_margin: float = 0.05,
                  draft_model: Optional[Tuple[Any, ModelConfig]] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 health_every: int = 2, state_margin: float = 1e3,
+                 max_retries: int = 2, retry_backoff_ticks: int = 0,
+                 demote_spec_after: int = 2,
+                 demote_engine_after: Optional[int] = None,
+                 deadline_s: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 watchdog_s: Optional[float] = None,
+                 fault_injector=None):
         if mode not in ("distilled", "cached_conv"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "cached_conv" and cfg.hyena is None:
@@ -244,9 +289,11 @@ class ContinuousBatchingEngine:
         self.cache, _ = unzip(init_cache(cfg, n_slots, max_len,
                                          cache_kind=cache_kind, per_slot=True))
         from repro.serve.engine import (jitted_decode_step,
+                                        jitted_decode_step_guarded,
                                         jitted_finalize_prefill,
                                         jitted_prefill, jitted_prefill_chunk)
         self._decode = jitted_decode_step(cfg, ctx)
+        self._decode_g = jitted_decode_step_guarded(cfg, ctx)
         self._prefill = jitted_prefill(cfg, max_len, cache_kind, ctx)
         self._write_slot = _jitted("write", write_cache_slot,
                                    donate_argnums=(0,))
@@ -381,6 +428,34 @@ class ContinuousBatchingEngine:
                                       "spec_accepted": 0,
                                       "spec_slot_rounds": 0,
                                       "spec_window_syncs": 0}
+        # --- resilience layer (see serve/README.md "Failure handling") ---
+        self._tick = 0
+        self._dispatch_seq = 0     # monotonic dispatch counter (see _retire)
+        self._health_every = max(0, int(health_every))
+        self._guard = self._health_every > 0
+        # pole-derived bound on the modal-state norm: |x| stays under
+        # margin/(1-max|λ|) for stable poles; inf disables the norm check
+        # (non-hyena archs, cached-conv kind — finiteness-only there)
+        self._state_bound = (modal_state_bound(params, cfg,
+                                               margin=state_margin)
+                             if cache_kind == "native" else float("inf"))
+        # decode-path guard is fused into the decode executable (_decode_g);
+        # the spec path keeps a separate state-only health dispatch (the
+        # spec-round executables don't expose their verify logits, and one
+        # extra dispatch amortizes over the round's multi-token yield)
+        self._health_state = _jitted("health_state", _slot_health_state)
+        self.max_retries = int(max_retries)
+        self._retry_backoff = max(0, int(retry_backoff_ticks))
+        self._demote_spec_after = int(demote_spec_after)
+        self._demote_engine_after = demote_engine_after
+        self._distilled_faults = 0
+        self._deadline_s = deadline_s
+        self._any_deadline = deadline_s is not None
+        self._max_queue = max_queue
+        self._watchdog_s = watchdog_s
+        self._injector = fault_injector
+        self.resilience = ResilienceCounters()
+        self.events: List[Dict[str, Any]] = []   # recovery-event log
 
     # ------------------------------------------------------------------
     # request intake
@@ -411,8 +486,18 @@ class ContinuousBatchingEngine:
             raise ValueError(
                 f"request needs {req.prompt_len + req.max_new_tokens} "
                 f"positions > max_len={self.max_len}")
-        req.status = QUEUED
         req.t_submit = self._clock()
+        if (self._max_queue is not None
+                and len(self.queue) >= self._max_queue):
+            # bounded-queue admission control: backpressure is an error
+            # completion, not an exception — the caller's stream keeps going
+            self.resilience.bump("rejected")
+            self._record_event("rejected", rid=req.rid)
+            self._finish_error(req, "rejected")
+            return req
+        req.status = QUEUED
+        if req.deadline_s is not None:
+            self._any_deadline = True
         self.queue.append(req)
         return req
 
@@ -460,11 +545,17 @@ class ContinuousBatchingEngine:
         (`overlap=False`): admit, then decode and retire in the same tick
         (the original loop). Returns the number of tokens appended to
         requests during this call."""
+        self._tick += 1
+        t_step0 = self._clock()
+        if self._injector is not None:
+            self._apply_scheduled_faults()
         dispatch = self._dispatch_spec if self._spec else self._dispatch_decode
         prev, self._pending = self._pending, None
         if self._overlap and self.n_active > 0:
-            self._pending = dispatch()
+            self._pending = self._safe_dispatch(dispatch)
         emitted = self._retire(prev)
+        if self._any_deadline:
+            self._sweep_deadlines()
         t0 = self._clock()
         work0 = self.stats["prefill_calls"] + self.stats["chunk_steps"]
         emitted += self._admit_phase()
@@ -475,8 +566,96 @@ class ContinuousBatchingEngine:
             # decode_tok_per_s is an upper bound on pure-decode throughput
             self.t_admit += self._clock() - t0
         if not self._overlap and self.n_active > 0:
-            emitted += self._retire(dispatch())
+            emitted += self._retire(self._safe_dispatch(dispatch))
+        if self._watchdog_s is not None:
+            lat = self._clock() - t_step0
+            if lat > self._watchdog_s:
+                self.resilience.bump("watchdog_trips")
+                self._record_event("watchdog", latency_s=round(lat, 4))
         return emitted
+
+    # ------------------------------------------------------------------
+    # resilience: fault application, guarded dispatch, deadlines
+    # ------------------------------------------------------------------
+    def _record_event(self, kind: str, **detail) -> None:
+        self.events.append({"tick": self._tick, "kind": kind, **detail})
+
+    def _apply_scheduled_faults(self) -> None:
+        """Fire this tick's scripted faults (corrupt / expire / stall); the
+        "raise" kind fires inside _safe_dispatch so it lands exactly where a
+        real dispatch failure would."""
+        inj = self._injector
+        tick = self._tick
+        residents = [b for b in range(self.n_slots) if self.active[b]]
+        for e in inj.corruptions(tick):
+            b = inj.pick_slot(e, tick, residents)
+            if b is None:
+                continue
+            self.cache = corrupt_cache_slot(self.cache, b, e.where, e.value)
+            inj.record(tick, "corrupt", slot=b, where=e.where)
+        for e in inj.expirations(tick):
+            b = inj.pick_slot(e, tick, residents)
+            if b is None or self.slots[b] is None:
+                continue
+            req = self.slots[b]
+            inj.record(tick, "expire", slot=b, rid=req.rid)
+            self.resilience.bump("deadline_expiries")
+            self._record_event("deadline", rid=req.rid, forced=True)
+            self._finish_error(req, "deadline")
+        st = inj.stall_s(tick)
+        if st > 0:
+            time.sleep(st)
+
+    def _safe_dispatch(self, dispatch):
+        """Dispatch one tick, absorbing failures. An injected FaultError is
+        raised BEFORE the jitted call, so the donated pool buffers are still
+        valid and the tick is simply skipped; a genuine in-flight exception
+        may have invalidated donated buffers, so the pool is rebuilt and
+        every resident recovered from its committed tokens."""
+        try:
+            if self._injector is not None:
+                self._injector.raise_if_scheduled(self._tick)
+            return dispatch()
+        except FaultError:
+            self.resilience.bump("dispatch_faults")
+            self._record_event("dispatch_fault", injected=True)
+            return None
+        except Exception as e:                        # noqa: BLE001
+            self.resilience.bump("dispatch_faults")
+            self._record_event("dispatch_fault", injected=False,
+                              error=repr(e))
+            self._rebuild_pool()
+            return None
+
+    def _sweep_deadlines(self) -> None:
+        """Expire requests past their end-to-end budget (per-request
+        deadline_s, falling back to the engine default): queued requests are
+        rejected in place, a chunk-in-flight prefill is cancelled, running
+        slots are released. All finish with ERROR status."""
+        now = self._clock()
+
+        def expired(req: Request) -> bool:
+            dl = req.deadline_s if req.deadline_s is not None \
+                else self._deadline_s
+            return (dl is not None and not math.isnan(req.t_submit)
+                    and now - req.t_submit > dl)
+
+        for req in [r for r in self.queue if expired(r)]:
+            self.resilience.bump("deadline_expiries")
+            self._record_event("deadline", rid=req.rid, where="queued")
+            self._finish_error(req, "deadline")
+        if self._chunk_state is not None and expired(self._chunk_state["req"]):
+            req = self._chunk_state["req"]
+            self._chunk_state = None
+            self.resilience.bump("deadline_expiries")
+            self._record_event("deadline", rid=req.rid, where="prefilling")
+            self._finish_error(req, "deadline")
+        for b in range(self.n_slots):
+            req = self.slots[b]
+            if req is not None and req.status == RUNNING and expired(req):
+                self.resilience.bump("deadline_expiries")
+                self._record_event("deadline", rid=req.rid, where="running")
+                self._finish_error(req, "deadline")
 
     def run(self) -> List[Request]:
         """Drain queue + residents to completion; returns finished requests."""
@@ -600,6 +779,19 @@ class ContinuousBatchingEngine:
                                 logits[:, 0, :], self._temps, self._top_ks,
                                 self._top_ps)
             jax.block_until_ready(self.cache)
+        if self._guard:
+            # state-integrity guards ride the decode dispatch: warm the
+            # fused guarded decode, the spec-path health variant and the
+            # quarantine-path slot reset so the steady state stays at zero
+            # XLA compiles with guards enabled
+            self.cache, logits, h = self._decode_g(
+                self.params, self.cache, self._last[:, None],
+                self._state_bound, conv_filters=self._conv_filters)
+            warm = [h]
+            if self._spec:
+                warm.append(self._health_state(self.cache, self._state_bound))
+            self.cache = self._reset_slot(self.cache, 0)    # idle at warmup
+            jax.block_until_ready(warm)
 
     def prefill_compile_stats(self) -> Dict[str, Any]:
         """Executable counts backing the O(#buckets) claim. Note the jit memo
@@ -621,9 +813,18 @@ class ContinuousBatchingEngine:
         """Enqueue one pooled decode + sample on device state; returns a
         pending record (slot->request snapshot, device token vector) to be
         retired after the NEXT dispatch."""
-        self.cache, logits = self._decode(self.params, self.cache,
-                                          self._last[:, None],
-                                          conv_filters=self._conv_filters)
+        self._dispatch_seq += 1
+        health = None
+        if self._guard and self._tick % self._health_every == 0:
+            # fused variant: the integrity reduction rides the decode
+            # executable — no extra host dispatch on the hot path
+            self.cache, logits, health = self._decode_g(
+                self.params, self.cache, self._last[:, None],
+                self._state_bound, conv_filters=self._conv_filters)
+        else:
+            self.cache, logits = self._decode(self.params, self.cache,
+                                              self._last[:, None],
+                                              conv_filters=self._conv_filters)
         nxt, self._tok_idx = self._stream_sample(
             self._slot_keys, self._tok_idx, logits[:, 0, :], self._temps,
             self._top_ks, self._top_ps)
@@ -633,9 +834,11 @@ class ContinuousBatchingEngine:
                     for b in np.nonzero(self.active)[0]]
         try:
             nxt.copy_to_host_async()           # double-buffered transfer
+            if health is not None:
+                health.copy_to_host_async()
         except AttributeError:
             pass
-        return (snapshot, nxt, None)
+        return (self._dispatch_seq, snapshot, nxt, None, health)
 
     def _sync_spec_len(self) -> None:
         """Upload the per-slot window vector when the controller changed it.
@@ -664,6 +867,7 @@ class ContinuousBatchingEngine:
         need = int(max((self._spec_win[b] for b in act), default=1)) - 1
         if need <= 0:
             return self._dispatch_decode()
+        self._dispatch_seq += 1
         self._sync_spec_len()
         K_r = next(L for L in self._spec_levels if L >= need)
         (self.cache, new_draft, emitted, n_emit, last, tok_idx) = \
@@ -689,12 +893,17 @@ class ContinuousBatchingEngine:
                 self.stats["spec_drafted"] += win - 1
                 self.stats["spec_slot_rounds"] += 1
             snapshot.append((int(b), req, win))
+        health = None
+        if self._guard and self._tick % self._health_every == 0:
+            health = self._health_state(self.cache, self._state_bound)
         try:
             emitted.copy_to_host_async()
             n_emit.copy_to_host_async()
+            if health is not None:
+                health.copy_to_host_async()
         except AttributeError:
             pass
-        return (snapshot, emitted, n_emit)
+        return (self._dispatch_seq, snapshot, emitted, n_emit, health)
 
     def _retire(self, pending) -> int:
         """Fetch a dispatched tick's tokens (the only host sync point on the
@@ -705,16 +914,30 @@ class ContinuousBatchingEngine:
         exactly as a non-speculative run would never have produced them)."""
         if pending is None:
             return 0
-        snapshot, toks_dev, n_emit_dev = pending
+        seq, snapshot, toks_dev, n_emit_dev, health_dev = pending
         toks = np.asarray(toks_dev)
         n_emit = None if n_emit_dev is None else np.asarray(n_emit_dev)
+        health = None if health_dev is None else np.asarray(health_dev)
         emitted = 0
         for b, req, win in snapshot:
             # slot may have been evicted (and even re-admitted) since this
             # tick was dispatched — its speculative token is dropped (the
             # round's drafted tokens were already counted at dispatch, so
-            # the acceptance denominator keeps the wasted work)
-            if self.slots[b] is not req or req.status != RUNNING:
+            # the acceptance denominator keeps the wasted work). The
+            # admit_seq guard catches the SAME request re-admitted into the
+            # same slot by a quarantine recovery: a pending dispatched at or
+            # before the re-admission (admit_seq records the dispatch
+            # counter at admission time, so this is ordering-exact in both
+            # the overlapped and sync loops) must not touch the freshly
+            # re-prefilled state with its stale tokens or health verdict.
+            if (self.slots[b] is not req or req.status != RUNNING
+                    or req.admit_seq >= seq):
+                continue
+            if health is not None and not bool(health[b]):
+                # guard tripped: this tick's token(s) for the slot are
+                # poisoned — drop them and quarantine the request (re-prefill
+                # from its committed tokens, or error out past max_retries)
+                self._quarantine(b, req)
                 continue
             if n_emit is None:
                 self._append_token(b, int(toks[b]))
@@ -746,6 +969,22 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     # admission: bucketed batches + chunked long prompts
     # ------------------------------------------------------------------
+    def _eff_prompt(self, req: Request) -> np.ndarray:
+        """The token sequence a (re-)admission must prefill: the prompt,
+        plus — for a recovered request — all committed tokens but the last
+        (which becomes the slot's `_last` input, exactly the state a
+        fault-free run had after emitting it)."""
+        if req.tokens:
+            return np.concatenate([req.prompt,
+                                   np.asarray(req.tokens[:-1], np.int32)])
+        return req.prompt
+
+    def _eff_len(self, req: Request) -> int:
+        return req.prompt_len + max(0, len(req.tokens) - 1)
+
+    def _eligible(self, req: Request) -> bool:
+        return req.retry_at <= self._tick      # quarantine backoff
+
     def _admit_phase(self) -> int:
         emitted = 0
         budget = self.max_prefills_per_step
@@ -755,7 +994,9 @@ class ContinuousBatchingEngine:
         while budget > 0 and self.queue and self._free_slot() is not None:
             idx = chunked = None
             for i, r in enumerate(self.queue):
-                if self._use_chunked(r.prompt_len):
+                if not self._eligible(r):
+                    continue
+                if self._use_chunked(self._eff_len(r)):
                     if self._chunk_state is None:
                         idx, chunked = i, True
                         break
@@ -771,15 +1012,16 @@ class ContinuousBatchingEngine:
                 budget -= 1
                 continue
             if self._bucketed:
-                bkt = self._bucket_of(self.queue[idx].prompt_len)
+                bkt = self._bucket_of(self._eff_len(self.queue[idx]))
                 free = [b for b in range(self.n_slots)
                         if self._slot_is_free(b)]
                 limit = min(budget, len(free), self._prefill_batch)
                 take = []
                 for i in range(idx, len(self.queue)):
                     r = self.queue[i]
-                    if (not self._use_chunked(r.prompt_len)
-                            and self._bucket_of(r.prompt_len) == bkt):
+                    if (self._eligible(r)
+                            and not self._use_chunked(self._eff_len(r))
+                            and self._bucket_of(self._eff_len(r)) == bkt):
                         take.append(i)
                         if len(take) == limit:
                             break
@@ -804,7 +1046,7 @@ class ContinuousBatchingEngine:
         """Prefill `reqs` together and scatter into `slots`. bucket=None is
         the legacy exact-length batch=1 path (bucket_prompts=False)."""
         if bucket is None:
-            prompt = jnp.asarray(reqs[0].prompt, jnp.int32)[None]
+            prompt = jnp.asarray(self._eff_prompt(reqs[0]), jnp.int32)[None]
             cache1, logits = self._prefill(self.params, prompt)
             self.cache = self._write_slot(self.cache, cache1, slots[0])
             if self._spec and not self._draft_shared:
@@ -817,8 +1059,9 @@ class ContinuousBatchingEngine:
             lens = np.full((K,), bucket, np.int32)     # dummy rows: full
             slot_idx = np.full((K,), self.n_slots, np.int32)  # dummies drop
             for j, (req, slot) in enumerate(zip(reqs, slots)):
-                toks[j, :req.prompt_len] = req.prompt
-                lens[j] = req.prompt_len
+                ep = self._eff_prompt(req)
+                toks[j, :len(ep)] = ep
+                lens[j] = len(ep)
                 slot_idx[j] = slot
             cache1, logits = self._prefill(self.params, jnp.asarray(toks),
                                            lengths=jnp.asarray(lens))
@@ -847,11 +1090,22 @@ class ContinuousBatchingEngine:
         p = np.ones(K, np.float32)
         sl = np.full(K, self.n_slots, np.int32)
         slen = np.ones(K, np.int32)
+        ti = np.ones(K, np.int32)
+        resume = np.zeros(K, bool)         # recovery: committed tokens exist
+        last_tok = np.zeros(K, np.int32)
         for j, (req, slot) in enumerate(zip(reqs, slots)):
             sp = req.sampling
             t[j], k[j], p[j] = sp.temperature, sp.top_k, sp.top_p
             sl[j] = slot
             slen[j] = (self._spec_k + 1 if (self._spec and req.spec) else 1)
+            if req.tokens:
+                # recovered request: the cache was re-prefilled through
+                # tokens[:-1]; tokens[-1] is the decode input and the stream
+                # counter resumes at len(tokens) — the same per-(slot, index)
+                # keys a fault-free run would consume next (bit-exactness)
+                resume[j] = True
+                last_tok[j] = req.tokens[-1]
+                ti[j] = len(req.tokens)
         # per-request key tree roots: fold_in(engine_key, rid) — path- and
         # admission-order-independent, so spec and non-spec runs of the same
         # request set consume identical key streams (see serve/README.md)
@@ -860,12 +1114,14 @@ class ContinuousBatchingEngine:
         keyvec = jnp.stack(rk)
         tj, kj, pj = jnp.asarray(t), jnp.asarray(k), jnp.asarray(p)
         toks = self._admit_sample(keyvec, logits, tj, kj, pj)
+        if resume.any():
+            toks = jnp.where(jnp.asarray(resume), jnp.asarray(last_tok), toks)
         (self._temps, self._top_ks, self._top_ps, self._last,
          self._slot_keys, self._tok_idx, self._spec_len) = self._meta(
             self._temps, self._top_ks, self._top_ps, self._last,
             self._slot_keys, self._tok_idx, self._spec_len,
             jnp.asarray(sl), tj, kj, pj, toks, keyvec,
-            jnp.ones((K,), jnp.int32), jnp.asarray(slen))
+            jnp.asarray(ti), jnp.asarray(slen))
         toks_h = np.asarray(toks)
         now = self._clock()
         for j, (req, slot) in enumerate(zip(reqs, slots)):
@@ -878,15 +1134,18 @@ class ContinuousBatchingEngine:
                                      enabled=bool(self._spec and req.spec))
             req.status = RUNNING
             req.slot = slot
+            req.admit_seq = self._dispatch_seq
             if math.isnan(req.t_admitted):
                 req.t_admitted = now
             self.slots[slot] = req
             self.active[slot] = True
             self.stats["admitted"] += 1
+            if resume[j]:
+                continue          # recovery: no new token at re-admission
             # first generated token comes from the prefill logits (same
             # convention as GenerationEngine.generate)
             self._append_token(slot, int(toks_h[j]))
-        return len(reqs)
+        return len(reqs) - int(resume[:len(reqs)].sum())
 
     # ------------------------------------------------------------------
     # chunked long-prompt admission
@@ -906,9 +1165,11 @@ class ContinuousBatchingEngine:
     def _start_chunked(self, req: Request, slot: int) -> None:
         req.status = PREFILLING
         req.slot = slot
-        req.t_admitted = self._clock()
+        if math.isnan(req.t_admitted):
+            req.t_admitted = self._clock()
         self.slots[slot] = req                  # reserve (not yet active)
         self._chunk_state = {"req": req, "slot": slot,
+                             "prompt": self._eff_prompt(req),
                              "pcache": self._new_prefill_cache(),
                              "dcache": (self._new_draft_prefill_cache()
                                         if self._spec
@@ -922,10 +1183,12 @@ class ContinuousBatchingEngine:
         lockstep (one extra chunk executable per tick)."""
         st = self._chunk_state
         req: Request = st["req"]
+        prompt = st["prompt"]                   # eff prompt (recovery-aware)
+        plen = int(prompt.shape[0])
         C = self._chunk
-        cl = min(C, req.prompt_len - st["start"])
+        cl = min(C, plen - st["start"])
         buf = np.zeros((1, C), np.int32)
-        buf[0, :cl] = req.prompt[st["start"]:st["start"] + cl]
+        buf[0, :cl] = prompt[st["start"]:st["start"] + cl]
         st["pcache"], last_logits = self._prefill_chunk(
             self.params, st["pcache"], jnp.asarray(buf), st["start"],
             chunk_len=cl, conv_filters=self._chunk_filters)
@@ -935,13 +1198,13 @@ class ContinuousBatchingEngine:
                 st["start"], chunk_len=cl, conv_filters=self._chunk_filters)
         st["start"] += cl
         self.stats["chunk_steps"] += 1
-        if st["start"] < req.prompt_len:
+        if st["start"] < plen:
             return 0
-        dcache = self._finalize(st["pcache"], req.prompt_len)
+        dcache = self._finalize(st["pcache"], plen)
         slot = st["slot"]
         self.cache = self._write_slot(self.cache, dcache, slot)
         if self._spec and not self._draft_shared:
-            ddc = self._draft_finalize(st["dcache"], req.prompt_len)
+            ddc = self._draft_finalize(st["dcache"], plen)
             self.draft_cache = self._write_slot(self.draft_cache, ddc, slot)
         self.stats["prefills"] += 1
         self.stats["prefill_calls"] += 1
@@ -961,18 +1224,14 @@ class ContinuousBatchingEngine:
         elif len(req.tokens) >= req.max_new_tokens:
             self._evict(slot, "max_tokens")
 
-    def _evict(self, slot: int, reason: str) -> None:
-        req = self.slots[slot]
-        req.status = FINISHED
-        req.finish_reason = reason
-        req.t_finished = self._clock()
-        req.slot = -1
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot without finishing its request: host bookkeeping plus
+        the device-metadata neutralization every departure needs (a stale
+        temperature or speculation window on a dead row would force the slow
+        branch of every jnp.all fast path — greedy sampler, full-accept
+        commit)."""
         self.slots[slot] = None
         self.active[slot] = False
-        self.stats["evicted"] += 1
-        # neutralize the freed slot's device metadata: a stale temperature
-        # or speculation window on a dead row would force the slow branch of
-        # every jnp.all fast path (greedy sampler, full-accept commit)
         (self._temps, self._top_ks, self._top_ps, self._spec_len) = \
             self._clear_meta(self._temps, self._top_ks, self._top_ps,
                              self._spec_len, slot)
@@ -980,11 +1239,168 @@ class ContinuousBatchingEngine:
         self._spec_win_dev[slot] = 1
         if self._spec_ctl is not None:
             self._spec_ctl.evict(slot)
+
+    def _evict(self, slot: int, reason: str) -> None:
+        req = self.slots[slot]
+        req.status = FINISHED
+        req.finish_reason = reason
+        req.t_finished = self._clock()
+        req.slot = -1
+        self._release_slot(slot)
+        self.stats["evicted"] += 1
         self.finished.append(req)
         if self.reset_on_evict:
             self.cache = self._reset_slot(self.cache, slot)
             if self._spec and not self._draft_shared:
                 self.draft_cache = self._reset_slot(self.draft_cache, slot)
+
+    # ------------------------------------------------------------------
+    # resilience: quarantine / recovery / degradation
+    # ------------------------------------------------------------------
+    def _finish_error(self, req: Request, reason: str) -> None:
+        """Complete a request with ERROR status from any lifecycle stage
+        (queued, prefilling, or running on a slot)."""
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            pass
+        if 0 <= req.slot < self.n_slots and self.slots[req.slot] is req:
+            self._release_slot(req.slot)
+            self.stats["evicted"] += 1
+        req.status = ERROR
+        req.finish_reason = reason
+        req.t_finished = self._clock()
+        req.slot = -1
+        self.finished.append(req)
+
+    def _requeue_for_recovery(self, req: Request) -> None:
+        """Put a (slot-released) request at the FRONT of the queue for exact
+        re-prefill from prompt + committed tokens, with linear backoff."""
+        req.status = QUEUED
+        req.slot = -1
+        req.retry_at = self._tick + self._retry_backoff * req.retries
+        self.queue.appendleft(req)
+
+    def _quarantine(self, slot: int, req: Request) -> None:
+        """A guard flagged this slot: zero the poisoned row, release it, and
+        either re-prefill the request exactly from its committed tokens
+        (bounded retries with backoff) or — past max_retries — complete it
+        with ERROR status. Repeated quarantines demote the request to plain
+        decode, and (opt-in) repeated distilled-path corruption demotes the
+        whole engine to the exact cached-conv path."""
+        self.resilience.bump("health_failures")
+        req.retries += 1
+        self._record_event("quarantine", rid=req.rid, slot=slot,
+                           retries=req.retries)
+        self._release_slot(slot)
+        self.cache = self._reset_slot(self.cache, slot)
+        if self._spec and not self._draft_shared:
+            self.draft_cache = self._reset_slot(self.draft_cache, slot)
+        if self.mode == "distilled":
+            self._distilled_faults += 1
+        if req.retries > self.max_retries:
+            self.resilience.bump("poisoned")
+            self._record_event("poisoned", rid=req.rid)
+            self._finish_error(req, "poisoned")
+        else:
+            if req.spec and req.retries >= self._demote_spec_after:
+                req.spec = False
+                self.resilience.bump("spec_demotions")
+                self._record_event("spec_demotion", rid=req.rid)
+            self.resilience.bump("slot_reprefills")
+            self._requeue_for_recovery(req)
+        if (self._demote_engine_after is not None
+                and self.mode == "distilled"
+                and self._distilled_faults >= self._demote_engine_after):
+            self._demote_to_conv()
+
+    def _rebuild_pool(self) -> None:
+        """A dispatch raised mid-flight: the jitted step donates the pool
+        buffers, so the old cache may be invalid. Re-initialize the pool(s)
+        and recover every resident request from its committed tokens; an
+        in-flight chunked prefill restarts from scratch (its request has no
+        committed tokens yet)."""
+        self.cache, _ = unzip(init_cache(self.cfg, self.n_slots, self.max_len,
+                                         cache_kind=self._cache_kind,
+                                         per_slot=True))
+        if self.draft_cache is not None:
+            self.draft_cache, _ = unzip(
+                init_cache(self._draft_cfg, self.n_slots, self.max_len,
+                           cache_kind="native", per_slot=True))
+        self._pending = None
+        if self._chunk_state is not None:
+            req = self._chunk_state["req"]
+            slot = self._chunk_state["slot"]
+            self._chunk_state = None
+            self.slots[slot] = None
+            req.status = QUEUED
+            req.slot = -1
+            self.queue.appendleft(req)
+        for b in range(self.n_slots):
+            req = self.slots[b]
+            if req is None:
+                continue
+            req.retries += 1
+            self._release_slot(b)
+            if req.retries > self.max_retries:
+                self.resilience.bump("poisoned")
+                self._finish_error(req, "poisoned")
+            else:
+                self.resilience.bump("slot_reprefills")
+                self._requeue_for_recovery(req)
+        self._record_event("pool_rebuild")
+
+    def _demote_to_conv(self) -> None:
+        """Engine-wide graceful degradation: repeated distilled-path
+        corruption swaps the serving path to the exact Lemma-2.1 cached-conv
+        cache kind (no distillation error to diverge). Residents are
+        recovered through the normal re-prefill path; speculation is
+        disabled (the shared-state draft read the distilled cache). A
+        one-time recompile of prefill/decode for the conv kind is the
+        accepted cost of the fallback."""
+        if self.mode != "distilled" or self.cfg.hyena is None:
+            return
+        from repro.serve.engine import (jitted_finalize_prefill,
+                                        jitted_prefill, jitted_prefill_chunk)
+        # drop (don't retire) the in-flight tick: its tokens are uncommitted
+        # and every resident is about to re-prefill from committed tokens —
+        # retiring here could recursively re-trigger demotion
+        self._pending = None
+        if self._chunk_state is not None:
+            req = self._chunk_state["req"]
+            slot = self._chunk_state["slot"]
+            self._chunk_state = None
+            self.slots[slot] = None
+            req.status = QUEUED
+            req.slot = -1
+            self.queue.appendleft(req)
+        for b in range(self.n_slots):
+            req = self.slots[b]
+            if req is not None:
+                self._release_slot(b)
+                self.resilience.bump("slot_reprefills")
+                self._requeue_for_recovery(req)
+        self.mode = "cached_conv"
+        self._cache_kind = "conv"
+        self.cache, _ = unzip(init_cache(self.cfg, self.n_slots, self.max_len,
+                                         cache_kind="conv", per_slot=True))
+        self._prefill = jitted_prefill(self.cfg, self.max_len, "conv",
+                                       self.ctx)
+        self._conv_filters = materialize_conv_filters(self.params, self.cfg,
+                                                      self.max_len)
+        self._chunk_filters = self._conv_filters
+        if self._chunk:
+            self._prefill_chunk = jitted_prefill_chunk(self.cfg, self.max_len,
+                                                       "conv", self.ctx)
+            self._finalize = jitted_finalize_prefill(self.cfg, self.max_len,
+                                                     "conv")
+        self._spec = False
+        self._spec_ctl = None
+        self.draft_cache = None
+        self._state_bound = float("inf")       # conv kind: finiteness only
+        self._distilled_faults = 0
+        self.resilience.bump("engine_demotions")
+        self._record_event("engine_demotion", to="cached_conv")
 
 
 # ---------------------------------------------------------------------------
@@ -1031,12 +1447,18 @@ def run_request_stream(engine: ContinuousBatchingEngine,
             time.sleep(min(1e-3, max(0.0, pending[i][0] - (clock() - t0))))
     wall = clock() - t0
     done = engine.finished
-    lat = np.asarray([r.latency for r in done])
-    ttft = np.asarray([r.ttft for r in done])
+    # latency percentiles over successful requests only: an error-status
+    # completion (rejected / deadline / poisoned) may never have produced a
+    # first token and would poison the percentiles with NaN
+    ok = [r for r in done if r.ok]
+    lat = np.asarray([r.latency for r in ok])
+    ttft = np.asarray([r.ttft for r in ok if not math.isnan(r.t_first_token)])
     n_tokens = int(sum(len(r.tokens) for r in done))
     decode_wall = max(wall - engine.t_admit, 1e-9)
     return {
         "n_requests": len(done),
+        "n_ok": len(ok),
+        "n_errors": len(done) - len(ok),
         "n_tokens": n_tokens,
         "wall_s": wall,
         "tok_per_s": n_tokens / wall if wall > 0 else float("inf"),
@@ -1045,6 +1467,7 @@ def run_request_stream(engine: ContinuousBatchingEngine,
         "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else math.nan,
         "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else math.nan,
         "p99_ttft_s": float(np.percentile(ttft, 99)) if len(ttft) else math.nan,
+        "resilience": engine.resilience.snapshot(),
     }
 
 

@@ -110,3 +110,80 @@ def test_missing_spec_mode_fails(tmp_path):
     new = {"distilled": _mode(1000, sat=2800)}
     assert _run(tmp_path, base, new) == 1
     assert _run(tmp_path, base, new, "--spec-ratio", "0") == 0
+
+
+# -- chaos gate -------------------------------------------------------------
+
+def _chaos_mode(expected=16, completed=16, ok=14, resilience=None, **extra):
+    m = {"n_requests_expected": expected, "n_completed": completed,
+         "n_ok": ok, "n_errors": completed - ok,
+         "unrecovered": expected - completed, "total_faults": 5,
+         "resilience": resilience or {"health_failures": 2,
+                                      "slot_reprefills": 2,
+                                      "dispatch_faults": 1,
+                                      "deadline_expiries": 1,
+                                      "watchdog_trips": 1, "poisoned": 1}}
+    m.update(extra)
+    return m
+
+
+def _run_chaos(tmp_path, chaos_modes, *args):
+    cp = tmp_path / "chaos.json"
+    cp.write_text(json.dumps({"serve_chaos": {"modes": chaos_modes}}))
+    argv = sys.argv
+    sys.argv = ["check_regression", "--chaos", str(cp), *args]
+    try:
+        return check_main()
+    finally:
+        sys.argv = argv
+
+
+def test_chaos_gate_standalone(tmp_path):
+    """Recovered faults (error-status completions included) pass; a request
+    that never reached a terminal status fails. No --baseline needed."""
+    good = {"distilled": _chaos_mode(), "cached_conv": _chaos_mode(ok=16)}
+    assert _run_chaos(tmp_path, good) == 0
+    hung = {"distilled": _chaos_mode(),
+            "cached_conv": _chaos_mode(completed=15, ok=15)}
+    assert _run_chaos(tmp_path, hung) == 1
+
+
+def test_chaos_gate_empty_doc_fails(tmp_path):
+    """A chaos file with no modes means the bench crashed before reporting —
+    that must fail, not silently pass."""
+    cp = tmp_path / "chaos.json"
+    cp.write_text(json.dumps({}))
+    argv = sys.argv
+    sys.argv = ["check_regression", "--chaos", str(cp)]
+    try:
+        assert check_main() == 1
+    finally:
+        sys.argv = argv
+
+
+def test_chaos_summary_reports_recovered_counts(tmp_path):
+    """Recovered-fault counters land in the summary table but do not gate:
+    a mode with many absorbed faults still passes when all requests
+    completed."""
+    modes = {"distilled": _chaos_mode(
+        resilience={"health_failures": 9, "slot_reprefills": 9,
+                    "dispatch_faults": 3, "deadline_expiries": 2,
+                    "watchdog_trips": 4, "poisoned": 2})}
+    out = tmp_path / "summary.md"
+    assert _run_chaos(tmp_path, modes, "--summary", str(out)) == 0
+    text = out.read_text()
+    assert "Chaos run" in text and "| distilled " in text and "| 9 " in text
+
+
+def test_chaos_alongside_throughput_gate(tmp_path):
+    """--baseline and --chaos compose: either gate alone can fail the run."""
+    base = {"distilled": _mode(1000)}
+    new = {"distilled": _mode(1000, sat=2800),
+           "distilled_spec": _mode(1000, sat=2900)}
+    cp = tmp_path / "chaos.json"
+    cp.write_text(json.dumps({"serve_chaos": {"modes": {
+        "distilled": _chaos_mode(completed=12, ok=12)}}}))
+    assert _run(tmp_path, base, new, "--chaos", str(cp)) == 1
+    cp.write_text(json.dumps({"serve_chaos": {"modes": {
+        "distilled": _chaos_mode()}}}))
+    assert _run(tmp_path, base, new, "--chaos", str(cp)) == 0
