@@ -16,7 +16,18 @@ state/conv/seq corruption, an injected dispatch fault, a host-loop stall and
 a forced deadline expiry. Reports completion counts and the engine's
 resilience counters; `check_regression --chaos` fails if any request never
 reached a terminal status (recovered-fault counts are report-only).
+Scaling rows (`serve_stream.scaling`): saturated-decode throughput of the
+sharded slot pool vs device count. Device counts are forced host (CPU)
+devices, so the curve verifies layout/overhead scaling (no cross-shard
+chatter, zero steady-state compiles), not hardware speedup — each
+subprocess sets --xla_force_host_platform_device_count before importing
+jax, which is why the sweep cannot run in this process.
 """
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -68,6 +79,8 @@ GEN_TOKENS = (16, 48)
 N_SLOTS, MAX_LEN = 4, 192
 PREFILL_BATCH = 2
 SPEC_K = "auto"                         # speculative case: autotuned config
+SCALE_DEVICES = (1, 2, 4)               # slot-pool shard sweep (CPU mesh)
+SCALE_SLOTS = 8                         # divisible by every count above
 
 
 def _stream_case(cfg, params, mode, spec_k=0):
@@ -109,6 +122,55 @@ def _stream_case(cfg, params, mode, spec_k=0):
     return m
 
 
+# run in a fresh interpreter per device count: the device count is fixed
+# before jax imports. Prints one "RESULT {json}" line on success.
+_SCALE_SNIPPET = """
+import json
+import jax, numpy as np
+from benchmarks.bench_throughput import MAX_LEN, SCALE_SLOTS
+from benchmarks.models import build, hyena_cfg
+from repro.launch.mesh import make_slot_mesh
+from repro.serve.metrics import count_compiles
+from repro.serve.scheduler import (ContinuousBatchingEngine,
+                                   measure_saturated_decode)
+
+d = {devices}
+cfg = hyena_cfg()
+params = build(cfg, distill=True)
+mesh = make_slot_mesh(d) if d > 1 else None
+eng = ContinuousBatchingEngine(params, cfg, n_slots=SCALE_SLOTS,
+                               max_len=MAX_LEN, mode="distilled", mesh=mesh)
+eng.warmup((32,))
+with count_compiles() as scope:
+    m = measure_saturated_decode(eng, prompt_len=32)
+print("RESULT " + json.dumps({{
+    "devices": d,
+    "n_shards": eng._n_shards,
+    "decode_sat_tok_per_s": m["decode_tok_per_s"],
+    "steady_state_compiles": scope.compiles,
+}}))
+"""
+
+
+def _scale_case(devices: int):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=os.pathsep.join(
+            p for p in (root, os.path.join(root, "src"),
+                        os.environ.get("PYTHONPATH")) if p))
+    env.pop("REPRO_SLOT_MESH", None)
+    p = subprocess.run([sys.executable, "-c",
+                        _SCALE_SNIPPET.format(devices=devices)],
+                       capture_output=True, text=True, env=env, timeout=1200)
+    for line in reversed(p.stdout.splitlines()):
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    tail = (p.stdout + p.stderr)[-2000:]
+    return {"devices": devices, "error": f"rc={p.returncode}: {tail}"}
+
+
 def stream_main(out):
     hcfg = hyena_cfg()
     hparams = build(hcfg, distill=True)
@@ -145,6 +207,19 @@ def stream_main(out):
                 f"prefill_exec={m['prefill_executables']}"
                 f"/{len(PROMPT_LENS)}lens "
                 f"compiles_in_run={m['steady_state_compiles']}" + extra))
+    # tok/s-vs-devices scaling of the sharded slot pool (fresh interpreter
+    # per device count — see _SCALE_SNIPPET)
+    scaling = [_scale_case(d) for d in SCALE_DEVICES]
+    results["scaling"] = {"n_slots": SCALE_SLOTS, "devices": scaling}
+    for s in scaling:
+        if "error" in s:
+            out(row(f"serve_stream/scaling/d{s['devices']}", 0.0,
+                    f"ERROR {s['error'][:120]}"))
+        else:
+            out(row(f"serve_stream/scaling/d{s['devices']}", 0.0,
+                    f"sat_decode_tok_s={s['decode_sat_tok_per_s']:.0f} "
+                    f"shards={s['n_shards']} "
+                    f"compiles_in_run={s['steady_state_compiles']}"))
     return {"serve_stream": results}
 
 

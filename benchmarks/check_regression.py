@@ -26,6 +26,12 @@ bench entirely) fails. Recovered-fault counters (quarantines, re-prefills,
 dispatch faults, watchdog trips) are reported in the summary table but not
 gated. `--chaos` can run standalone, without `--baseline`.
 
+Scaling gate: the sharded-slot-pool device sweep (`serve_stream.scaling`)
+must have produced every row (no errored subprocess) with zero steady-state
+compiles; throughputs are threshold-compared per device count only when the
+baseline carries the same row, so baselines predating the sweep gate
+nothing and never fail.
+
 A markdown comparison table (old -> new tok/s per mode, acceptance, tokens
 per round) is appended to `--summary` when given, else to the file named by
 $GITHUB_STEP_SUMMARY when set — so spec perf is visible on every PR's
@@ -46,6 +52,74 @@ from typing import Any, Dict, List, Optional
 
 def _modes(doc) -> Dict[str, Dict[str, Any]]:
     return doc.get("serve_stream", {}).get("modes", {})
+
+
+def _scaling(doc) -> Dict[int, Dict[str, Any]]:
+    """Device-sweep rows keyed by device count. Empty for files that
+    predate the sharded slot pool — callers must not fail on those."""
+    rows = doc.get("serve_stream", {}).get("scaling", {}).get("devices", [])
+    out: Dict[int, Dict[str, Any]] = {}
+    for r in rows:
+        try:
+            out[int(r["devices"])] = r
+        except (KeyError, TypeError, ValueError):
+            continue
+    return out
+
+
+def _check_scaling(base: Dict[int, Dict[str, Any]],
+                   new: Dict[int, Dict[str, Any]],
+                   threshold: float, failures: List[str]) -> None:
+    """Gate the sharded-pool device sweep: every new row must have run
+    (no error, zero steady-state compiles); throughput is
+    threshold-compared only where the baseline has the same device count
+    (old baselines without scaling rows gate nothing)."""
+    for d in sorted(new):
+        nm = new[d]
+        if nm.get("error"):
+            failures.append(f"scaling d{d}: bench errored: "
+                            f"{str(nm['error'])[:200]}")
+            continue
+        compiles = _num(nm, "steady_state_compiles")
+        if compiles is None or compiles != 0:
+            failures.append(f"scaling d{d}: {compiles} steady-state "
+                            f"compiles (sharded pool must not recompile)")
+        new_tps = _num(nm, "decode_sat_tok_per_s")
+        bm = base.get(d)
+        old_tps = _num(bm, "decode_sat_tok_per_s") if bm else None
+        if old_tps is None or new_tps is None:
+            if new_tps is not None:
+                print(f"[bench-check] scaling d{d:d} "
+                      f"{new_tps:8.1f} tok/s (no baseline row)")
+            continue
+        floor = old_tps * (1.0 - threshold)
+        status = "ok" if new_tps >= floor else "REGRESSION"
+        print(f"[bench-check] scaling d{d:d} {old_tps:8.1f} -> "
+              f"{new_tps:8.1f} tok/s (floor {floor:.1f}) {status}")
+        if new_tps < floor:
+            failures.append(
+                f"scaling d{d}: sat decode tok/s dropped {old_tps:.1f} -> "
+                f"{new_tps:.1f} (> {threshold:.0%})")
+
+
+def _scaling_table(base: Dict[int, Dict[str, Any]],
+                   new: Dict[int, Dict[str, Any]]) -> List[str]:
+    if not new:
+        return []
+    lines = ["", "### Sharded slot pool: tok/s vs devices", "",
+             "| devices | sat decode tok/s (old → new) | compiles in run |",
+             "|---|---|---|"]
+    for d in sorted(set(base) | set(new)):
+        bm, nm = base.get(d, {}), new.get(d, {})
+        if nm.get("error"):
+            lines.append(f"| {d} | ERROR | - |")
+            continue
+        lines.append(
+            f"| {d} "
+            f"| {_fmt(_num(bm, 'decode_sat_tok_per_s'))} → "
+            f"{_fmt(_num(nm, 'decode_sat_tok_per_s'))} "
+            f"| {_fmt(_num(nm, 'steady_state_compiles'), '.0f')} |")
+    return lines
 
 
 def _num(m: Dict[str, Any], key: str) -> Optional[float]:
@@ -183,11 +257,15 @@ def main() -> int:
 
     base: Dict[str, Dict[str, Any]] = {}
     new: Dict[str, Dict[str, Any]] = {}
+    base_scaling: Dict[int, Dict[str, Any]] = {}
+    new_scaling: Dict[int, Dict[str, Any]] = {}
     if args.baseline:
         with open(args.baseline) as f:
-            base = _modes(json.load(f))
+            base_doc = json.load(f)
         with open(args.new) as f:
-            new = _modes(json.load(f))
+            new_doc = json.load(f)
+        base, new = _modes(base_doc), _modes(new_doc)
+        base_scaling, new_scaling = _scaling(base_doc), _scaling(new_doc)
 
     failures: List[str] = []
     for mode, bm in sorted(base.items()):
@@ -234,7 +312,11 @@ def main() -> int:
                         f"{args.spec_ratio:.2f}x same-run distilled "
                         f"{plain_d:.1f}")
 
+    if args.baseline:
+        _check_scaling(base_scaling, new_scaling, args.threshold, failures)
+
     lines = _summary_table(base, new) if args.baseline else []
+    lines += _scaling_table(base_scaling, new_scaling)
     if args.chaos:
         with open(args.chaos) as f:
             chaos = json.load(f).get("serve_chaos", {}).get("modes", {})

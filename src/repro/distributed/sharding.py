@@ -20,6 +20,7 @@ Logical axes used across the model zoo:
   state    — SSM/LRU recurrent-state axis
   conv     — short-conv tap axis (never sharded)
   filters  — hyena filter-head axis
+  slots    — serving slot-pool rows (one request per row; data-parallel)
 """
 from __future__ import annotations
 
@@ -172,6 +173,24 @@ SERVE_RULES = ShardingRules(rules={
     "filters": [],
     "act_embed": [],
 })
+
+
+# Serving slot pool: the per-request row axis shards over the data axis and
+# NOTHING else does — each slot's recurrence is independent, so a row-sharded
+# pool decodes with zero cross-device communication. Model dims, the stacked
+# layer axis, and positions within a row stay local to each shard.
+SLOT_RULES = ShardingRules(rules={"slots": [("pod", "data"), "data"]})
+
+
+def slot_axes(axes_tree):
+    """Map a cache axes-tree (from `unzip(init_cache(...))`) to slot-pool
+    logical axes: the per-request 'batch' dim becomes 'slots'; every other
+    dim is replicated. Feed the result to `tree_specs`/`tree_shardings` with
+    SLOT_RULES to resolve the pool's shardings on a data mesh."""
+    def one(a):
+        return tuple("slots" if x == "batch" else None for x in a)
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
 
 
 def constrain(x, axes: Tuple[Optional[str], ...], rules: ShardingRules,

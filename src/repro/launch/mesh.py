@@ -25,6 +25,20 @@ def make_local_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_slot_mesh(n_shards: int | None = None):
+    """1-D data mesh for the serving slot pool, over the first `n_shards`
+    local devices (default: all of them). Built directly as a Mesh — unlike
+    jax.make_mesh this accepts a device subset, so a 4-way pool can run on
+    4 of 8 forced host devices."""
+    import numpy as np
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else int(n_shards)
+    if n < 1 or n > len(devices):
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]), ("data",))
+
+
 HW = {
     # TPU v5e per-chip constants used for the roofline terms
     "peak_flops_bf16": 197e12,      # FLOP/s

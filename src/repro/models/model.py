@@ -1169,23 +1169,41 @@ def write_cache_slot(pool, single, slot):
 def write_cache_slots(pool, multi, slots):
     """Scatter a batch=K prefilled cache (from `prefill(..., lengths=...)`)
     into rows `slots` (K,) of a pooled per-slot cache in ONE call — the
-    bucketed batch-admission path. Slot indices >= n_slots are dropped
-    (mode="drop"), which is how the engine pads an admission batch to a fixed
-    size: dummy rows point at slot index n_slots. jit-friendly (traced
-    `slots`); `multi["pos"]` must be a (K,) vector."""
+    bucketed batch-admission path. Rows whose slot index falls outside
+    [0, n_slots) are dummy padding (the engine pads an admission batch to a
+    fixed size by pointing dummies at slot index n_slots) and must not touch
+    the pool. That drop is an EXPLICIT mask, not out-of-bounds scatter
+    semantics: under a sharded pool each partition sees shifted local
+    indices, so `.at[...].set(mode="drop")` would drop or clamp different
+    rows per shard. A scatter-max marker records per pool row the index of
+    the last valid admission row targeting it (-1 = untouched; dummy rows
+    contribute -1 so they can never override a valid update), and each leaf
+    takes a masked gather against it. jit-friendly (traced `slots`);
+    `multi["pos"]` must be a (K,) vector."""
     slots = jnp.asarray(slots, jnp.int32)
+    K = slots.shape[0]
+    B = pool["pos"].shape[0]
+    valid = (slots >= 0) & (slots < B)
+    src = jnp.where(valid, jnp.arange(K, dtype=jnp.int32), -1)
+    marker = jnp.full((B,), -1, jnp.int32).at[
+        jnp.where(valid, slots, 0)].max(src)
+    take_idx = jnp.maximum(marker, 0)
+    keep = marker >= 0
 
     def upd(axis: int):
         def f(pool_leaf, multi_leaf):
-            vals = multi_leaf.astype(pool_leaf.dtype)
-            if axis == 0:
-                return pool_leaf.at[slots].set(vals, mode="drop")
-            return pool_leaf.at[:, slots].set(vals, mode="drop")
+            vals = jnp.take(multi_leaf.astype(pool_leaf.dtype), take_idx,
+                            axis=axis)
+            mask = keep.reshape((1,) * axis + (B,)
+                                + (1,) * (pool_leaf.ndim - axis - 1))
+            return jnp.where(mask, vals, pool_leaf)
         return f
 
     out = {"groups": jax.tree.map(upd(1), pool["groups"], multi["groups"]),
-           "pos": pool["pos"].at[slots].set(
-               jnp.asarray(multi["pos"], jnp.int32), mode="drop")}
+           "pos": jnp.where(keep,
+                            jnp.take(jnp.asarray(multi["pos"], jnp.int32),
+                                     take_idx),
+                            pool["pos"])}
     if "rem" in pool:
         out["rem"] = jax.tree.map(upd(0), pool["rem"], multi["rem"])
     return out

@@ -10,13 +10,20 @@ both of which are in the snapshot. Restoring the pooled cache, the device
 metadata vectors, and the host bookkeeping therefore continues every
 resident request token-for-token as if the process had never died.
 
-Checkpoint format (pickle, `format: 1`): a dict of
+Checkpoint format (pickle, `format: 2`): a dict of
   * engine shape/compat: mode, n_slots, max_len, cache_kind
+  * mesh: None for a single-device engine, else the slot-pool mesh layout
+    (axis names, shape, shard count, per-slot shard ownership) — restore
+    refuses a layout mismatch instead of silently resharding, because the
+    device buffers in the snapshot are laid out per shard
   * device state (device_get to numpy): cache, draft_cache, meta vectors
     (_temps/_top_ks/_top_ps/_last/_slot_keys/_tok_idx/_spec_len), spec_win
   * host bookkeeping: slots, queue, finished (pickled Request objects —
     object identity between slots/queue entries is preserved), active,
     tick, next_rid, t_admit, stats, resilience counters, buckets_used
+
+Format 1 (pre-sharding) snapshots carry no mesh entry; they still load,
+but only into a single-device engine.
 
 Not captured: compiled executables (the restored engine re-warms or
 recompiles on demand) and the SlotSpecController's acceptance EMAs (windows
@@ -35,7 +42,23 @@ import numpy as np
 
 _META_KEYS = ("_temps", "_top_ks", "_top_ps", "_last", "_slot_keys",
               "_tok_idx", "_spec_len")
-FORMAT = 1
+FORMAT = 2
+
+
+def _mesh_desc(engine) -> Optional[Dict[str, Any]]:
+    """Canonical description of the engine's slot-pool layout (None when
+    single-device). Compared verbatim at restore: two engines with equal
+    descriptions place every slot row on the same shard."""
+    if getattr(engine, "mesh", None) is None:
+        return None
+    mesh = engine.mesh
+    return {
+        "axis_names": [str(a) for a in mesh.axis_names],
+        "shape": [int(s) for s in mesh.devices.shape],
+        "n_shards": int(engine._n_shards),
+        "slot_shard": [int(engine._shard_of(b))
+                       for b in range(engine.n_slots)],
+    }
 
 
 def save_engine(engine, path: Optional[str] = None) -> Dict[str, Any]:
@@ -61,6 +84,7 @@ def save_engine(engine, path: Optional[str] = None) -> Dict[str, Any]:
         "n_slots": engine.n_slots,
         "max_len": engine.max_len,
         "cache_kind": engine._cache_kind,
+        "mesh": _mesh_desc(engine),
         "cache": jax.device_get(engine.cache),
         "draft_cache": (None if engine.draft_cache is None
                         else jax.device_get(engine.draft_cache)),
@@ -98,14 +122,30 @@ def restore_engine(engine, state) -> None:
     exact cache rows, stream counters, and last tokens."""
     if isinstance(state, str):
         state = load_checkpoint(state)
-    if state.get("format") != FORMAT:
-        raise ValueError(f"unknown checkpoint format {state.get('format')!r}")
+    fmt = state.get("format")
+    if fmt not in (1, FORMAT):
+        raise ValueError(f"unknown checkpoint format {fmt!r}")
     if (state["n_slots"] != engine.n_slots
             or state["max_len"] != engine.max_len):
         raise ValueError(
             f"checkpoint shape (n_slots={state['n_slots']}, "
             f"max_len={state['max_len']}) does not match the engine "
             f"(n_slots={engine.n_slots}, max_len={engine.max_len})")
+    here = _mesh_desc(engine)
+    if fmt == 1:
+        if here is not None:
+            raise ValueError(
+                "format-1 checkpoint carries no mesh metadata and cannot be "
+                "restored into a sharded engine "
+                f"(engine slot-pool layout: {here})")
+    else:
+        saved = state.get("mesh")
+        if saved != here:
+            raise ValueError(
+                f"checkpoint slot-pool mesh layout {saved} does not match "
+                f"the engine's {here} — rebuild the engine with the same "
+                f"mesh (or restore single-device from a single-device "
+                f"snapshot)")
     if state["mode"] != engine.mode:
         if state["mode"] == "cached_conv" and engine.mode == "distilled":
             engine._demote_to_conv()
@@ -114,14 +154,15 @@ def restore_engine(engine, state) -> None:
                              f"match engine mode {engine.mode!r}")
     engine._pending = None
     engine._chunk_state = None
-    engine.cache = jax.tree.map(jnp.asarray, state["cache"])
+    engine.cache = engine._put_pool(state["cache"], engine._cache_sh)
     if state["draft_cache"] is not None:
         if engine.draft_cache is None:
             raise ValueError("checkpoint has a draft pool but the engine "
                              "was built without one (spec config mismatch)")
-        engine.draft_cache = jax.tree.map(jnp.asarray, state["draft_cache"])
+        engine.draft_cache = engine._put_pool(state["draft_cache"],
+                                              engine._draft_sh)
     for k in _META_KEYS:
-        setattr(engine, k, jnp.asarray(state["meta"][k]))
+        setattr(engine, k, engine._put_slot_vec(state["meta"][k]))
     engine._spec_win[:] = state["spec_win"]
     engine._spec_win_dev[:] = state["spec_win"]
     engine.active[:] = state["active"]

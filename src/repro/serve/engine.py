@@ -35,12 +35,18 @@ from repro.serve.sampling import sample_token
 _JIT_CACHE: Dict = {}
 
 
-def jitted_decode_step(cfg: ModelConfig, ctx: ShardCtx = NOCTX):
-    key = ("decode", cfg, id(ctx))
+def jitted_decode_step(cfg: ModelConfig, ctx: ShardCtx = NOCTX, *,
+                       out_shardings=None, shard_key=None):
+    """`out_shardings` pins the (cache, logits) output shardings for a
+    sharded slot pool — the layout never drifts between ticks, so the
+    steady state stays at zero recompiles. `shard_key` distinguishes the
+    sharded executable from the single-device one in the shared memo."""
+    key = ("decode", cfg, id(ctx), shard_key)
     if key not in _JIT_CACHE:
+        kw = {} if out_shardings is None else {"out_shardings": out_shardings}
         _JIT_CACHE[key] = jax.jit(
             functools.partial(decode_step, cfg=cfg, ctx=ctx),
-            donate_argnums=(1,))
+            donate_argnums=(1,), **kw)
     return _JIT_CACHE[key]
 
 
@@ -51,17 +57,20 @@ def _decode_step_guarded(params, cache, tokens, bound, *, cfg, ctx,
     return cache, logits, slot_health(cache, logits[:, 0, :], bound)
 
 
-def jitted_decode_step_guarded(cfg: ModelConfig, ctx: ShardCtx = NOCTX):
+def jitted_decode_step_guarded(cfg: ModelConfig, ctx: ShardCtx = NOCTX, *,
+                               out_shardings=None, shard_key=None):
     """Pooled decode step with the per-slot state-integrity reduction fused
     into the same executable (`bound` is data — one compile covers every
     margin). A separate jitted health call costs a whole extra host dispatch
     per tick, which on CPU is ~25% of saturated decode throughput; fused,
-    the guard rides the decode dispatch for (nearly) free."""
-    key = ("decode_guarded", cfg, id(ctx))
+    the guard rides the decode dispatch for (nearly) free.
+    `out_shardings`/`shard_key`: see `jitted_decode_step`."""
+    key = ("decode_guarded", cfg, id(ctx), shard_key)
     if key not in _JIT_CACHE:
+        kw = {} if out_shardings is None else {"out_shardings": out_shardings}
         _JIT_CACHE[key] = jax.jit(
             functools.partial(_decode_step_guarded, cfg=cfg, ctx=ctx),
-            donate_argnums=(1,))
+            donate_argnums=(1,), **kw)
     return _JIT_CACHE[key]
 
 

@@ -81,6 +81,7 @@ RESILIENCE_KEYS = (
     "watchdog_trips",       # host tick exceeded the watchdog latency
     "checkpoint_saves",
     "checkpoint_restores",
+    "spec_window_syncs",    # controller window vector uploaded to the pool
 )
 
 

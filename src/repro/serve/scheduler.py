@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 import time
 from collections import deque
 from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
@@ -57,9 +58,11 @@ from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import unzip
+from repro.distributed.sharding import (SLOT_RULES, slot_axes, tree_shardings,
+                                        unzip)
 from repro.models.layers import NOCTX, ShardCtx
 from repro.models.model import (init_cache, init_prefill_cache,
                                 materialize_conv_filters, modal_state_bound,
@@ -73,27 +76,42 @@ from repro.serve.speculative import DRAW_TAG, token_keys
 QUEUED, PREFILLING, RUNNING, FINISHED, ERROR = (
     "queued", "prefilling", "running", "finished", "error")
 
-_SLOT_JITS: Dict[str, Callable] = {}
+_SLOT_JITS: Dict[Any, Callable] = {}
 
 
-def _jitted(name: str, fn, **jit_kw):
-    if name not in _SLOT_JITS:
-        _SLOT_JITS[name] = jax.jit(fn, **jit_kw)
-    return _SLOT_JITS[name]
+def _jitted(name: str, fn, *, key=None, **jit_kw):
+    """Shared jit memo for the slot-vector ops. `key` extends the memo key
+    for variants whose jit options differ (a sharded engine pins
+    out_shardings, so it cannot share the single-device executable)."""
+    k = (name, key)
+    if k not in _SLOT_JITS:
+        _SLOT_JITS[k] = jax.jit(fn, **jit_kw)
+    return _SLOT_JITS[k]
 
 
 def _update_slot_meta(temps, top_ks, top_ps, last, keys, tok_idx, spec_len,
                       slots, t, k, p, tok, kv, ti, sl):
     """Scatter per-slot sampling params, request PRNG keys, stream counters
     and speculation windows + last token for newly admitted requests.
-    Out-of-range slot indices (dummy admission rows) are dropped."""
-    md = "drop"
-    return (temps.at[slots].set(t, mode=md), top_ks.at[slots].set(k, mode=md),
-            top_ps.at[slots].set(p, mode=md),
-            last.at[slots].set(tok, mode=md),
-            keys.at[slots].set(kv, mode=md),
-            tok_idx.at[slots].set(ti, mode=md),
-            spec_len.at[slots].set(sl, mode=md))
+    Out-of-range slot indices (dummy admission rows) are dropped by an
+    explicit mask — the same scatter-max marker as
+    `model.write_cache_slots`, because OOB-index scatter semantics are not
+    partition-stable on a sharded slot vector."""
+    B = temps.shape[0]
+    K = slots.shape[0]
+    valid = (slots >= 0) & (slots < B)
+    src = jnp.where(valid, jnp.arange(K, dtype=jnp.int32), -1)
+    marker = jnp.full((B,), -1, jnp.int32).at[
+        jnp.where(valid, slots, 0)].max(src)
+    take_idx = jnp.maximum(marker, 0)
+    keep = marker >= 0
+
+    def put(vec, vals):
+        g = jnp.take(vals.astype(vec.dtype), take_idx, axis=0)
+        return jnp.where(keep.reshape((B,) + (1,) * (vec.ndim - 1)), g, vec)
+
+    return (put(temps, t), put(top_ks, k), put(top_ps, p), put(last, tok),
+            put(keys, kv), put(tok_idx, ti), put(spec_len, sl))
 
 
 def _admit_sample(keyvec, logits, t, k, p):
@@ -127,12 +145,15 @@ def _clear_slot_meta(temps, top_ks, top_ps, spec_len, slot):
     """Reset a freed slot's sampling params and speculation window to the
     neutral values (greedy, window 1). Stale values on dead slots would
     otherwise defeat the all-greedy and all-fully-accepted fast paths (the
-    fused executables branch on jnp.all over EVERY row, dead or alive)."""
-    md = "drop"
-    return (temps.at[slot].set(0.0, mode=md),
-            top_ks.at[slot].set(0, mode=md),
-            top_ps.at[slot].set(1.0, mode=md),
-            spec_len.at[slot].set(1, mode=md))
+    fused executables branch on jnp.all over EVERY row, dead or alive).
+    One-hot select rather than a scatter: slot == n_slots (the warmup dummy)
+    matches no row, and the select is partition-stable on a sharded
+    vector."""
+    hit = jnp.arange(temps.shape[0], dtype=jnp.int32) == slot
+    return (jnp.where(hit, jnp.float32(0.0), temps),
+            jnp.where(hit, jnp.int32(0), top_ks),
+            jnp.where(hit, jnp.float32(1.0), top_ps),
+            jnp.where(hit, jnp.int32(1), spec_len))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,7 +259,7 @@ class ContinuousBatchingEngine:
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
                  max_len: int = 4096, mode: str = "distilled",
-                 ctx: ShardCtx = NOCTX, seed: int = 0,
+                 ctx: ShardCtx = NOCTX, seed: int = 0, mesh=None,
                  max_prefills_per_step: int = 1, reset_on_evict: bool = False,
                  bucket_prompts: bool = True, min_bucket: int = 8,
                  prefill_chunk: Optional[int] = None, overlap: bool = True,
@@ -270,7 +291,6 @@ class ContinuousBatchingEngine:
                 f"prefill_chunk={prefill_chunk} must divide into the SSD "
                 f"chunk length (cfg.ssm.chunk={cfg.ssm.chunk}): use a "
                 f"multiple of it, or a value <= it")
-        self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
@@ -286,37 +306,52 @@ class ContinuousBatchingEngine:
         self._clock = clock
         cache_kind = "conv" if mode == "cached_conv" else "native"
         self._cache_kind = cache_kind
-        self.cache, _ = unzip(init_cache(cfg, n_slots, max_len,
-                                         cache_kind=cache_kind, per_slot=True))
-        from repro.serve.engine import (jitted_decode_step,
-                                        jitted_decode_step_guarded,
-                                        jitted_finalize_prefill,
-                                        jitted_prefill, jitted_prefill_chunk)
-        self._decode = jitted_decode_step(cfg, ctx)
-        self._decode_g = jitted_decode_step_guarded(cfg, ctx)
-        self._prefill = jitted_prefill(cfg, max_len, cache_kind, ctx)
-        self._write_slot = _jitted("write", write_cache_slot,
-                                   donate_argnums=(0,))
-        self._write_slots = _jitted("write_many", write_cache_slots,
-                                    donate_argnums=(0,))
-        self._reset_slot = _jitted("reset", reset_cache_slot,
-                                   donate_argnums=(0,))
-        self._meta = _jitted("slot_meta", _update_slot_meta)
+        # --- slot-pool sharding (serve/README.md "Sharded slot pool") ---
+        # every per-slot buffer (the pooled cache + the metadata vectors)
+        # shards its row axis over the mesh's data axis; each shard decodes
+        # its own rows with no communication — the admission scatter and the
+        # sampled-token fetch are the only cross-shard hops.
+        mesh = self._resolve_mesh(mesh, n_slots)
+        self.mesh = mesh
+        if mesh is None:
+            self._n_shards = 1
+            self._slot_sh = None
+        else:
+            mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+            n_sh = mesh_shape.get("pod", 1) * mesh_shape.get("data", 1)
+            if n_sh <= 1:
+                raise ValueError("slot-pool mesh has no 'data' axis to "
+                                 "shard over (or it has size 1)")
+            if n_slots % n_sh != 0:
+                raise ValueError(
+                    f"n_slots={n_slots} does not divide across {n_sh} slot "
+                    f"shards — pick n_slots as a multiple of the data-axis "
+                    f"size")
+            self._n_shards = n_sh
+            self._slot_sh = NamedSharding(mesh, P("data"))
+            # params (and later the draft params / long filters) are
+            # replicated across the mesh: a committed single-device param
+            # tree mixed with a sharded pool in one jit is a placement error
+            params = jax.device_put(params, NamedSharding(mesh, P()))
+        self.params = params
+        self.cache, self._cache_sh = self._make_pool(cfg, cache_kind)
+        self._draft_sh = None
+        self._meta = _jitted("slot_meta", _update_slot_meta,
+                             key=self._shard_tag("meta"),
+                             **self._vec_out(7))
         # long filters: cached-conv decode always needs them; chunked prefill
         # needs them for any Hyena layer in either mode
         need_filters = cfg.hyena is not None and (cache_kind == "conv"
                                                   or prefill_chunk)
-        self._conv_filters = (materialize_conv_filters(params, cfg, max_len)
-                              if cache_kind == "conv" else None)
+        self._conv_filters = (self._replicate(
+            materialize_conv_filters(params, cfg, max_len))
+            if cache_kind == "conv" else None)
         self._chunk_filters = (self._conv_filters if cache_kind == "conv"
-                               else (materialize_conv_filters(params, cfg,
-                                                              max_len)
+                               else (self._replicate(
+                                   materialize_conv_filters(params, cfg,
+                                                            max_len))
                                      if need_filters else None))
-        self._prefill_chunk = (jitted_prefill_chunk(cfg, max_len, cache_kind,
-                                                    ctx)
-                               if prefill_chunk else None)
-        self._finalize = (jitted_finalize_prefill(cfg, max_len, cache_kind)
-                          if prefill_chunk else None)
+        self._build_pool_ops()
         # --- self-speculative decoding (serve/speculative.py) ---
         self.spec_report = None
         if isinstance(spec_k, str):
@@ -362,14 +397,42 @@ class ContinuousBatchingEngine:
                     spec_mod.make_draft_params(params, cfg, d_ord,
                                                fit_len=min(max_len, 2048),
                                                embed=self._draft_shared)
+            self._draft_params = self._replicate(self._draft_params)
+            if not self._draft_shared:
+                from repro.serve.engine import (jitted_finalize_prefill,
+                                                jitted_prefill,
+                                                jitted_prefill_chunk)
+                self.draft_cache, self._draft_sh = self._make_pool(
+                    self._draft_cfg, "native")
+                (self._write_slot_d, self._write_slots_d,
+                 self._reset_slot_d) = self._pool_write_ops(
+                    self._draft_cfg, "native", self._draft_sh, "draft")
+                self._draft_prefill = jitted_prefill(self._draft_cfg,
+                                                     max_len, "native", ctx)
+                if prefill_chunk:
+                    self._draft_prefill_chunk = jitted_prefill_chunk(
+                        self._draft_cfg, max_len, "native", ctx)
+                    self._draft_finalize = jitted_finalize_prefill(
+                        self._draft_cfg, max_len, "native")
             # per-depth executables: a controller-shrunk window dispatches
             # the smallest covering depth instead of masking inside the
-            # full-K one, so a narrow round costs a narrow round
+            # full-K one, so a narrow round costs a narrow round. On a
+            # sharded pool each round's outputs are pinned to the pool /
+            # slot-vector shardings (same discipline as _build_pool_ops).
+            spec_osh = spec_key = None
+            if self.mesh is not None:
+                s = self._slot_sh
+                spec_osh = (self._cache_sh,
+                            None if self._draft_shared else self._draft_sh,
+                            s, s, s, s)
+                spec_key = (self.mesh, cache_kind)
             self._spec_levels = spec_mod.spec_round_levels(self._spec_k)
             self._spec_rounds = {
                 L: spec_mod.jitted_spec_round(cfg, self._draft_cfg, L,
                                               self._draft_shared, ctx,
-                                              branch=self._spec_branch)
+                                              branch=self._spec_branch,
+                                              out_shardings=spec_osh,
+                                              shard_key=spec_key)
                 for L in self._spec_levels}
             self._spec_round = self._spec_rounds[self._spec_k]
             if spec_adapt:
@@ -379,31 +442,23 @@ class ContinuousBatchingEngine:
                     spec_adapt, spec_mod.SpecControllerConfig) else None)
                 self._spec_ctl = spec_mod.SlotSpecController(
                     n_slots, self._spec_k, ctl_cfg)
-            if not self._draft_shared:
-                self.draft_cache, _ = unzip(
-                    init_cache(self._draft_cfg, n_slots, max_len,
-                               cache_kind="native", per_slot=True))
-                self._draft_prefill = jitted_prefill(self._draft_cfg,
-                                                     max_len, "native", ctx)
-                if prefill_chunk:
-                    self._draft_prefill_chunk = jitted_prefill_chunk(
-                        self._draft_cfg, max_len, "native", ctx)
-                    self._draft_finalize = jitted_finalize_prefill(
-                        self._draft_cfg, max_len, "native")
         # per-slot host-side bookkeeping; sampling params, last token, PRNG
         # keys, stream counters and speculation windows live on device so the
         # overlapped loop never waits on a host upload
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.active = np.zeros(n_slots, bool)
-        self._temps = jnp.zeros((n_slots,), jnp.float32)
-        self._top_ks = jnp.zeros((n_slots,), jnp.int32)
-        self._top_ps = jnp.ones((n_slots,), jnp.float32)
-        self._last = jnp.zeros((n_slots,), jnp.int32)
         self._base_key = jax.random.PRNGKey(seed)
-        self._slot_keys = jnp.zeros((n_slots,) + self._base_key.shape,
-                                    self._base_key.dtype)
-        self._tok_idx = jnp.zeros((n_slots,), jnp.int32)
-        self._spec_len = jnp.ones((n_slots,), jnp.int32)
+        # sharded pool: every per-slot vector lives row-sharded next to its
+        # cache rows (_put_slot_vec is the identity without a mesh)
+        self._temps = self._put_slot_vec(jnp.zeros((n_slots,), jnp.float32))
+        self._top_ks = self._put_slot_vec(jnp.zeros((n_slots,), jnp.int32))
+        self._top_ps = self._put_slot_vec(jnp.ones((n_slots,), jnp.float32))
+        self._last = self._put_slot_vec(jnp.zeros((n_slots,), jnp.int32))
+        self._slot_keys = self._put_slot_vec(
+            jnp.zeros((n_slots,) + self._base_key.shape,
+                      self._base_key.dtype))
+        self._tok_idx = self._put_slot_vec(jnp.zeros((n_slots,), jnp.int32))
+        self._spec_len = self._put_slot_vec(jnp.ones((n_slots,), jnp.int32))
         # host mirror of _spec_len plus a shadow of what the device holds:
         # admission/eviction scatters keep both in sync; controller window
         # changes mark the mirror dirty and _sync_spec_len uploads the whole
@@ -412,8 +467,12 @@ class ContinuousBatchingEngine:
         self._spec_win = np.ones(n_slots, np.int32)
         self._spec_win_dev = self._spec_win.copy()
         self._admit_sample = _jitted("admit_sample", _admit_sample)
-        self._stream_sample = _jitted("stream_sample", _stream_sample)
-        self._clear_meta = _jitted("clear_slot_meta", _clear_slot_meta)
+        self._stream_sample = _jitted("stream_sample", _stream_sample,
+                                      key=self._shard_tag("stream"),
+                                      **self._vec_out(2))
+        self._clear_meta = _jitted("clear_slot_meta", _clear_slot_meta,
+                                   key=self._shard_tag("clear"),
+                                   **self._vec_out(4))
         self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self._pending: Optional[Tuple[list, Any, Any]] = None
@@ -440,10 +499,10 @@ class ContinuousBatchingEngine:
                                                margin=state_margin)
                              if cache_kind == "native" else float("inf"))
         # decode-path guard is fused into the decode executable (_decode_g);
-        # the spec path keeps a separate state-only health dispatch (the
+        # the spec path keeps a separate state-only health dispatch, built
+        # alongside the other pool executables in _build_pool_ops (the
         # spec-round executables don't expose their verify logits, and one
         # extra dispatch amortizes over the round's multi-token yield)
-        self._health_state = _jitted("health_state", _slot_health_state)
         self.max_retries = int(max_retries)
         self._retry_backoff = max(0, int(retry_backoff_ticks))
         self._demote_spec_after = int(demote_spec_after)
@@ -456,6 +515,128 @@ class ContinuousBatchingEngine:
         self._injector = fault_injector
         self.resilience = ResilienceCounters()
         self.events: List[Dict[str, Any]] = []   # recovery-event log
+
+    # ------------------------------------------------------------------
+    # slot-pool sharding (see serve/README.md "Sharded slot pool")
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _resolve_mesh(mesh, n_slots: int):
+        """An explicit `mesh` wins. Otherwise REPRO_SLOT_MESH opts the
+        engine into sharding from the environment (the CI sharded-serve job
+        sets it): "auto" takes every local device, an integer takes that
+        many; either shrinks to the largest count that divides n_slots and
+        degrades to single-device (None) at 1."""
+        if mesh is not None:
+            return mesh
+        want = os.environ.get("REPRO_SLOT_MESH", "").strip()
+        if not want:
+            return None
+        n = jax.device_count() if want == "auto" else int(want)
+        n = min(n, jax.device_count())
+        while n > 1 and n_slots % n != 0:
+            n -= 1
+        if n <= 1:
+            return None
+        from repro.launch.mesh import make_slot_mesh
+        return make_slot_mesh(n)
+
+    def _make_pool(self, cfg: ModelConfig, cache_kind: str):
+        """Fresh pooled cache, placed row-sharded on the mesh when one is
+        set. Returns (values_tree, shardings_tree-or-None); the shardings
+        come from the logical 'slots' axis (sharding.slot_axes + SLOT_RULES)
+        resolved against the mesh."""
+        vals, axes = unzip(init_cache(cfg, self.n_slots, self.max_len,
+                                      cache_kind=cache_kind, per_slot=True))
+        if self.mesh is None:
+            return vals, None
+        sh = tree_shardings(vals, slot_axes(axes), SLOT_RULES, self.mesh)
+        return jax.device_put(vals, sh), sh
+
+    def _replicate(self, tree):
+        """Pin a tree (params, long filters) replicated across the mesh."""
+        if tree is None or self.mesh is None:
+            return tree
+        return jax.device_put(tree, NamedSharding(self.mesh, P()))
+
+    def _put_slot_vec(self, v):
+        """Place a per-slot vector ((n_slots,) or (n_slots, ...)) with the
+        pool's row sharding; identity without a mesh."""
+        v = jnp.asarray(v)
+        return v if self.mesh is None else jax.device_put(v, self._slot_sh)
+
+    def _put_pool(self, tree, shardings):
+        """Reload a host-side cache snapshot onto the pool's placement."""
+        vals = jax.tree.map(jnp.asarray, tree)
+        return vals if shardings is None else jax.device_put(vals, shardings)
+
+    def _shard_tag(self, tag: str):
+        return None if self.mesh is None else (self.mesh, tag)
+
+    def _vec_out(self, n: int):
+        """out_shardings kwargs pinning n slot-vector outputs (no-op
+        without a mesh)."""
+        if self.mesh is None:
+            return {}
+        sh = self._slot_sh if n == 1 else (self._slot_sh,) * n
+        return {"out_shardings": sh}
+
+    def _shard_of(self, b: int) -> int:
+        """Which mesh shard owns slot row b (P('data') shards the row axis
+        in contiguous blocks)."""
+        return b * self._n_shards // self.n_slots
+
+    def _pool_write_ops(self, cfg: ModelConfig, cache_kind: str, sh, tag):
+        """The three pool-mutating ops (single-row write, batched admission
+        write, row reset) for one pool. Sharded pools pin the output to the
+        pool's shardings and key the memo per (mesh, cfg, kind, pool) —
+        the serving and draft pools have different tree structures, so they
+        cannot share one pinned executable."""
+        if self.mesh is None:
+            return (_jitted("write", write_cache_slot, donate_argnums=(0,)),
+                    _jitted("write_many", write_cache_slots,
+                            donate_argnums=(0,)),
+                    _jitted("reset", reset_cache_slot, donate_argnums=(0,)))
+        key = (self.mesh, cfg, cache_kind, tag)
+        return (_jitted("write", write_cache_slot, key=key,
+                        out_shardings=sh, donate_argnums=(0,)),
+                _jitted("write_many", write_cache_slots, key=key,
+                        out_shardings=sh, donate_argnums=(0,)),
+                _jitted("reset", reset_cache_slot, key=key,
+                        out_shardings=sh, donate_argnums=(0,)))
+
+    def _build_pool_ops(self) -> None:
+        """(Re)create every executable whose output layout is pinned to the
+        serving pool's structure/shardings — at construction, and again when
+        a cache-kind demotion (_demote_to_conv) or pool rebuild swaps the
+        pool structure. Pinning out_shardings is what keeps a sharded
+        steady state at zero recompiles: the decode/spec outputs feed the
+        next tick's inputs, so their layout must never drift."""
+        from repro.serve.engine import (jitted_decode_step,
+                                        jitted_decode_step_guarded,
+                                        jitted_finalize_prefill,
+                                        jitted_prefill, jitted_prefill_chunk)
+        cfg, kind, ctx = self.cfg, self._cache_kind, self.ctx
+        sk = None if self.mesh is None else (self.mesh, kind)
+        osh = osh_g = None
+        if self.mesh is not None:
+            osh = (self._cache_sh, self._slot_sh)
+            osh_g = (self._cache_sh, self._slot_sh, self._slot_sh)
+        self._decode = jitted_decode_step(cfg, ctx, out_shardings=osh,
+                                          shard_key=sk)
+        self._decode_g = jitted_decode_step_guarded(cfg, ctx,
+                                                    out_shardings=osh_g,
+                                                    shard_key=sk)
+        self._prefill = jitted_prefill(cfg, self.max_len, kind, ctx)
+        (self._write_slot, self._write_slots, self._reset_slot) = \
+            self._pool_write_ops(cfg, kind, self._cache_sh, "serve")
+        self._health_state = _jitted("health_state", _slot_health_state,
+                                     key=self._shard_tag("health"),
+                                     **self._vec_out(1))
+        self._prefill_chunk = (jitted_prefill_chunk(cfg, self.max_len, kind,
+                                                    ctx)
+                               if self._chunk else None)
+        self._finalize = (jitted_finalize_prefill(cfg, self.max_len, kind)
+                          if self._chunk else None)
 
     # ------------------------------------------------------------------
     # request intake
@@ -524,10 +705,32 @@ class ContinuousBatchingEngine:
         return not self.active[b] and self.slots[b] is None
 
     def _free_slot(self) -> Optional[int]:
+        free = self._free_slots_balanced()
+        return free[0] if free else None
+
+    def _free_slots_balanced(self) -> List[int]:
+        """Free slots, ordered so admissions spread across mesh shards.
+        Single-device this is plain ascending order (unchanged behaviour);
+        sharded, each pick goes to the least-loaded shard so one shard never
+        ends up crunching every live row while the others decode garbage."""
+        free = [b for b in range(self.n_slots) if self._slot_is_free(b)]
+        if self._n_shards <= 1 or not free:
+            return free
+        load = [0] * self._n_shards
         for b in range(self.n_slots):
-            if self._slot_is_free(b):
-                return b
-        return None
+            if not self._slot_is_free(b):
+                load[self._shard_of(b)] += 1
+        by_shard: Dict[int, List[int]] = {}
+        for b in free:
+            by_shard.setdefault(self._shard_of(b), []).append(b)
+        out: List[int] = []
+        while by_shard:
+            s = min(by_shard, key=lambda s: (load[s], s))
+            out.append(by_shard[s].pop(0))
+            load[s] += 1
+            if not by_shard[s]:
+                del by_shard[s]
+        return out
 
     def _bucket_of(self, L: int) -> int:
         b = max(self._min_bucket, 1 << max(L - 1, 0).bit_length())
@@ -713,7 +916,7 @@ class ContinuousBatchingEngine:
                     dc1, _ = self._draft_prefill(
                         self._draft_params, jnp.zeros((K, bkt), jnp.int32),
                         lengths=jnp.full((K,), bkt, jnp.int32))
-                    self.draft_cache = self._write_slots(
+                    self.draft_cache = self._write_slots_d(
                         self.draft_cache, dc1,
                         jnp.full((K,), self.n_slots, jnp.int32))
                 warm_admission_ops(K, logits)
@@ -742,8 +945,9 @@ class ContinuousBatchingEngine:
                     jnp.zeros((1, self._chunk), jnp.int32), 0,
                     chunk_len=self._chunk, conv_filters=self._chunk_filters)
                 ddc = self._draft_finalize(dpc, self._chunk)
-                self.draft_cache = self._write_slot(self.draft_cache, ddc, 0)
-                self.draft_cache = self._reset_slot(self.draft_cache, 0)
+                self.draft_cache = self._write_slot_d(self.draft_cache,
+                                                      ddc, 0)
+                self.draft_cache = self._reset_slot_d(self.draft_cache, 0)
             warm_admission_ops(1, logits)
         if self._spec:
             # one speculative round (fused draft scan + verify/commit) per
@@ -842,11 +1046,17 @@ class ContinuousBatchingEngine:
 
     def _sync_spec_len(self) -> None:
         """Upload the per-slot window vector when the controller changed it.
-        One whole-vector transfer, no recompile (spec_len is data)."""
+        One whole-vector transfer, no recompile (spec_len is data). The
+        upload goes through `_put_slot_vec`, so on a sharded pool each
+        device receives only its own row block — a plain `jnp.asarray`
+        would land the vector committed to device 0 and force an all-to-one
+        layout change inside the next spec round."""
         if not np.array_equal(self._spec_win, self._spec_win_dev):
-            self._spec_len = jnp.asarray(self._spec_win, jnp.int32)
+            self._spec_len = self._put_slot_vec(
+                np.asarray(self._spec_win, np.int32))
             self._spec_win_dev[:] = self._spec_win
             self.stats["spec_window_syncs"] += 1
+            self.resilience.bump("spec_window_syncs")
 
     def _dispatch_spec(self):
         """Enqueue one speculative round — fused K-step draft scan (on the
@@ -1013,8 +1223,7 @@ class ContinuousBatchingEngine:
                 continue
             if self._bucketed:
                 bkt = self._bucket_of(self._eff_len(self.queue[idx]))
-                free = [b for b in range(self.n_slots)
-                        if self._slot_is_free(b)]
+                free = self._free_slots_balanced()
                 limit = min(budget, len(free), self._prefill_batch)
                 take = []
                 for i in range(idx, len(self.queue)):
@@ -1051,8 +1260,8 @@ class ContinuousBatchingEngine:
             self.cache = self._write_slot(self.cache, cache1, slots[0])
             if self._spec and not self._draft_shared:
                 dc1, _ = self._draft_prefill(self._draft_params, prompt)
-                self.draft_cache = self._write_slot(self.draft_cache, dc1,
-                                                    slots[0])
+                self.draft_cache = self._write_slot_d(self.draft_cache, dc1,
+                                                      slots[0])
         else:
             K = self._prefill_batch
             toks = np.zeros((K, bucket), np.int32)
@@ -1071,8 +1280,8 @@ class ContinuousBatchingEngine:
                 dc1, _ = self._draft_prefill(self._draft_params,
                                              jnp.asarray(toks),
                                              lengths=jnp.asarray(lens))
-                self.draft_cache = self._write_slots(self.draft_cache, dc1,
-                                                     jnp.asarray(slot_idx))
+                self.draft_cache = self._write_slots_d(self.draft_cache, dc1,
+                                                       jnp.asarray(slot_idx))
             self._buckets_used.add(bucket)
         self.stats["prefills"] += len(reqs)
         self.stats["prefill_calls"] += 1
@@ -1151,16 +1360,20 @@ class ContinuousBatchingEngine:
     # chunked long-prompt admission
     # ------------------------------------------------------------------
     def _new_prefill_cache(self):
+        # replicated-committed on a mesh: the chunk step's OUTPUT cache is
+        # committed (its inputs carry the mesh), so a fresh scratch cache
+        # must be too, or chunk 2 of a long prompt recompiles the step with
+        # a committed-pcache signature chunk 1 never saw
         pc, _ = unzip(init_prefill_cache(self.cfg, 1, self.max_len,
                                          chunk=self._chunk,
                                          cache_kind=self._cache_kind))
-        return pc
+        return self._replicate(pc)
 
     def _new_draft_prefill_cache(self):
         pc, _ = unzip(init_prefill_cache(self._draft_cfg, 1, self.max_len,
                                          chunk=self._chunk,
                                          cache_kind="native"))
-        return pc
+        return self._replicate(pc)
 
     def _start_chunked(self, req: Request, slot: int) -> None:
         req.status = PREFILLING
@@ -1205,7 +1418,7 @@ class ContinuousBatchingEngine:
         self.cache = self._write_slot(self.cache, dcache, slot)
         if self._spec and not self._draft_shared:
             ddc = self._draft_finalize(st["dcache"], plen)
-            self.draft_cache = self._write_slot(self.draft_cache, ddc, slot)
+            self.draft_cache = self._write_slot_d(self.draft_cache, ddc, slot)
         self.stats["prefills"] += 1
         self.stats["prefill_calls"] += 1
         self._chunk_state = None
@@ -1252,7 +1465,7 @@ class ContinuousBatchingEngine:
         if self.reset_on_evict:
             self.cache = self._reset_slot(self.cache, slot)
             if self._spec and not self._draft_shared:
-                self.draft_cache = self._reset_slot(self.draft_cache, slot)
+                self.draft_cache = self._reset_slot_d(self.draft_cache, slot)
 
     # ------------------------------------------------------------------
     # resilience: quarantine / recovery / degradation
@@ -1295,7 +1508,7 @@ class ContinuousBatchingEngine:
         self._release_slot(slot)
         self.cache = self._reset_slot(self.cache, slot)
         if self._spec and not self._draft_shared:
-            self.draft_cache = self._reset_slot(self.draft_cache, slot)
+            self.draft_cache = self._reset_slot_d(self.draft_cache, slot)
         if self.mode == "distilled":
             self._distilled_faults += 1
         if req.retries > self.max_retries:
@@ -1320,13 +1533,11 @@ class ContinuousBatchingEngine:
         and recover every resident request from its committed tokens; an
         in-flight chunked prefill restarts from scratch (its request has no
         committed tokens yet)."""
-        self.cache, _ = unzip(init_cache(self.cfg, self.n_slots, self.max_len,
-                                         cache_kind=self._cache_kind,
-                                         per_slot=True))
+        self.cache, self._cache_sh = self._make_pool(self.cfg,
+                                                     self._cache_kind)
         if self.draft_cache is not None:
-            self.draft_cache, _ = unzip(
-                init_cache(self._draft_cfg, self.n_slots, self.max_len,
-                           cache_kind="native", per_slot=True))
+            self.draft_cache, self._draft_sh = self._make_pool(
+                self._draft_cfg, "native")
         self._pending = None
         if self._chunk_state is not None:
             req = self._chunk_state["req"]
@@ -1360,8 +1571,6 @@ class ContinuousBatchingEngine:
         accepted cost of the fallback."""
         if self.mode != "distilled" or self.cfg.hyena is None:
             return
-        from repro.serve.engine import (jitted_finalize_prefill,
-                                        jitted_prefill, jitted_prefill_chunk)
         # drop (don't retire) the in-flight tick: its tokens are uncommitted
         # and every resident is about to re-prefill from committed tokens —
         # retiring here could recursively re-trigger demotion
@@ -1382,18 +1591,13 @@ class ContinuousBatchingEngine:
                 self._requeue_for_recovery(req)
         self.mode = "cached_conv"
         self._cache_kind = "conv"
-        self.cache, _ = unzip(init_cache(self.cfg, self.n_slots, self.max_len,
-                                         cache_kind="conv", per_slot=True))
-        self._prefill = jitted_prefill(self.cfg, self.max_len, "conv",
-                                       self.ctx)
-        self._conv_filters = materialize_conv_filters(self.params, self.cfg,
-                                                      self.max_len)
+        self.cache, self._cache_sh = self._make_pool(self.cfg, "conv")
+        self._conv_filters = self._replicate(
+            materialize_conv_filters(self.params, self.cfg, self.max_len))
         self._chunk_filters = self._conv_filters
-        if self._chunk:
-            self._prefill_chunk = jitted_prefill_chunk(self.cfg, self.max_len,
-                                                       "conv", self.ctx)
-            self._finalize = jitted_finalize_prefill(self.cfg, self.max_len,
-                                                     "conv")
+        # the conv pool has a different tree structure (and shardings), so
+        # every pool-pinned executable is rebuilt for the new cache kind
+        self._build_pool_ops()
         self._spec = False
         self._spec_ctl = None
         self.draft_cache = None

@@ -498,23 +498,28 @@ def spec_round_tree(params, draft_params, cache, last, spec_len, draft_cache,
 # ---------------------------------------------------------------------------
 def jitted_spec_round(cfg: ModelConfig, draft_cfg: ModelConfig, K: int,
                       shared_draft: bool, ctx: ShardCtx = NOCTX,
-                      branch: int = 1):
+                      branch: int = 1, *, out_shardings=None, shard_key=None):
     """Positional args: (params, draft_params, cache, last, spec_len,
     draft_cache) — pass draft_cache=None with shared_draft=True. The
     serving cache (and the draft pool, when separate) is donated. The
     selection-commit is enabled automatically for archs that support it.
-    branch >= 2 compiles the top-k tree round (`spec_round_tree`)."""
+    branch >= 2 compiles the top-k tree round (`spec_round_tree`).
+    `out_shardings` pins the round's output layout for a sharded slot pool
+    (see `jitted_decode_step`); `shard_key` keeps the sharded executable
+    distinct in the shared memo."""
     from repro.models.model import supports_state_select
     from repro.serve.engine import _JIT_CACHE
     sel = shared_draft and supports_state_select(cfg)
-    key = ("spec_round", cfg, draft_cfg, K, shared_draft, branch, id(ctx))
+    key = ("spec_round", cfg, draft_cfg, K, shared_draft, branch, id(ctx),
+           shard_key)
     if key not in _JIT_CACHE:
         fn = (spec_round if branch <= 1
               else functools.partial(spec_round_tree, branch=branch))
+        kw = {} if out_shardings is None else {"out_shardings": out_shardings}
         _JIT_CACHE[key] = jax.jit(
             functools.partial(fn, K=K, cfg=cfg, draft_cfg=draft_cfg,
                               ctx=ctx, select_commit=sel),
-            donate_argnums=(2,) if shared_draft else (2, 5))
+            donate_argnums=(2,) if shared_draft else (2, 5), **kw)
     return _JIT_CACHE[key]
 
 

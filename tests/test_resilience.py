@@ -494,5 +494,10 @@ def test_checkpoint_pickles_cleanly(hyena_model, tmp_path):
         state = pickle.load(f)
     leaves = jax.tree.leaves(state["cache"])
     assert all(isinstance(x, np.ndarray) for x in leaves)
-    assert state["format"] == 1
+    assert state["format"] == 2
+    assert "mesh" in state     # format-2 slot-pool layout metadata
+    if eng.mesh is None:
+        assert state["mesh"] is None
+    else:
+        assert state["mesh"]["n_shards"] == eng._n_shards
     assert json.dumps(state["resilience"])  # JSON-serializable counters

@@ -1,0 +1,293 @@
+"""Sharded slot pool: correctness on a multi-device data mesh.
+
+The heavyweight checks spawn a fresh interpreter with 4 forced host devices
+(the main test process keeps a single device) and assert the contract from
+serve/README.md "Sharded slot pool": greedy serving on a 4-way sharded pool
+is token-for-token identical to the single-device engine — distilled and
+cached-conv modes, speculation on and off — with ZERO steady-state XLA
+compiles, and checkpoints restore only into the same mesh layout.
+
+The fast single-device tests cover the pieces the sharding work flushed
+out: the masked admission scatter (`write_cache_slots` must drop dummy rows
+by explicit mask, not by out-of-bounds scatter semantics), the sharded
+spec-window upload counter, and the format-2 checkpoint mesh metadata.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HYENA, HyenaConfig, ModelConfig
+from repro.distributed.sharding import unzip
+from repro.models.model import (gather_cache_rows, init_cache, init_params,
+                                write_cache_slots)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(body: str, n_devices: int = 4):
+    code = textwrap.dedent(body)
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_devices}",
+               PYTHONPATH=SRC)
+    env.pop("REPRO_SLOT_MESH", None)      # explicit meshes only, per test
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+_COMMON = """
+import jax, numpy as np
+from repro.configs.base import ModelConfig, HyenaConfig, HYENA
+from repro.models.model import init_params
+from repro.distributed.sharding import unzip
+from repro.launch.mesh import make_slot_mesh
+from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                   SamplingParams)
+from repro.serve.metrics import count_compiles
+
+cfg = ModelConfig(name="shard-hyena", family="lcsm", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64,
+                  act="gelu", norm="layernorm", pattern=(HYENA,),
+                  hyena=HyenaConfig(n_filter_heads=2, filter_order=16,
+                                    filter_emb=9, distill_order=8),
+                  max_seq=512, dtype="float32")
+params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+LENS = ((4, 8), (7, 5), (12, 11), (20, 6), (9, 9))
+
+def make_reqs():
+    rng = np.random.default_rng(0)
+    return [Request(rid=rid, prompt=rng.integers(0, cfg.vocab, size=pl)
+                    .astype(np.int32), max_new_tokens=gl,
+                    sampling=SamplingParams())
+            for rid, (pl, gl) in enumerate(LENS)]
+
+def run(mesh, mode, spec_k, count=False):
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=48,
+                                   mode=mode, spec_k=spec_k, mesh=mesh)
+    eng.warmup(tuple(pl for pl, _ in LENS))
+    reqs = make_reqs()
+    for r in reqs[:4]:
+        eng.submit_request(r)
+    eng.step(); eng.step()
+    n = None
+    if count:
+        with count_compiles() as scope:
+            eng.submit_request(reqs[4])
+            while eng.has_work:
+                eng.step()
+        n = scope.compiles
+    else:
+        eng.submit_request(reqs[4])
+        while eng.has_work:
+            eng.step()
+    return {r.rid: list(r.tokens) for r in eng.finished}, n, eng
+"""
+
+
+def test_sharded_greedy_token_identity_distilled():
+    """4-way sharded pool == single device, distilled mode, spec off and on
+    (shared-state draft), with zero steady-state compiles sharded."""
+    run_sub(_COMMON + """
+for spec in (0, 2):
+    base, _, _ = run(None, "distilled", spec)
+    shard, n, _ = run(make_slot_mesh(4), "distilled", spec, count=True)
+    assert base == shard, (spec, base, shard)
+    assert n == 0, f"spec={spec}: {n} steady-state compiles on the mesh"
+""")
+
+
+def test_sharded_greedy_token_identity_cached_conv():
+    """4-way sharded pool == single device, cached-conv mode, spec off and
+    on (separate native draft pool), zero steady-state compiles sharded."""
+    run_sub(_COMMON + """
+for spec in (0, 2):
+    base, _, _ = run(None, "cached_conv", spec)
+    shard, n, _ = run(make_slot_mesh(4), "cached_conv", spec, count=True)
+    assert base == shard, (spec, base, shard)
+    assert n == 0, f"spec={spec}: {n} steady-state compiles on the mesh"
+""")
+
+
+def test_sharded_checkpoint_restore_same_mesh():
+    """Mid-run snapshot of a sharded engine restores into a fresh engine on
+    the same mesh and continues token-identically; restoring it into a
+    single-device engine (or a format-1 snapshot into a sharded engine)
+    raises a clear layout error; a non-divisible n_slots is rejected."""
+    run_sub(_COMMON + """
+from repro.serve.checkpoint import restore_engine, save_engine
+
+mesh = make_slot_mesh(4)
+base, _, _ = run(None, "distilled", 0)
+
+eng = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=48,
+                               mode="distilled", mesh=mesh)
+eng.warmup(tuple(pl for pl, _ in LENS))
+for r in make_reqs():
+    eng.submit_request(r)
+for _ in range(3):
+    eng.step()
+import pickle
+state = pickle.loads(pickle.dumps(save_engine(eng)))
+assert state["format"] == 2
+assert state["mesh"] is not None and state["mesh"]["n_shards"] == 4
+
+eng2 = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=48,
+                                mode="distilled", mesh=mesh)
+eng2.warmup(tuple(pl for pl, _ in LENS))
+restore_engine(eng2, state)
+while eng2.has_work:
+    eng2.step()
+got = {r.rid: list(r.tokens) for r in eng2.finished}
+assert got == base, (got, base)
+
+# sharded snapshot -> single-device engine: refused
+single = ContinuousBatchingEngine(params, cfg, n_slots=4, max_len=48,
+                                  mode="distilled")
+try:
+    restore_engine(single, state)
+    raise SystemExit("mesh-layout mismatch not rejected")
+except ValueError as e:
+    assert "mesh" in str(e)
+
+# format-1 snapshot (no mesh metadata) -> sharded engine: refused
+old = {k: v for k, v in state.items() if k != "mesh"}
+old["format"] = 1
+try:
+    restore_engine(eng2, old)
+    raise SystemExit("format-1 restore into sharded engine not rejected")
+except ValueError as e:
+    assert "format-1" in str(e)
+
+# slot count must divide across the shards
+try:
+    ContinuousBatchingEngine(params, cfg, n_slots=3, max_len=48,
+                             mode="distilled", mesh=make_slot_mesh(2))
+    raise SystemExit("non-divisible n_slots not rejected")
+except ValueError as e:
+    assert "divide" in str(e)
+""")
+
+
+# ---------------------------------------------------------------------------
+# fast single-device pieces
+# ---------------------------------------------------------------------------
+def _tiny_cfg(name="shard-scatter"):
+    return ModelConfig(name=name, family="lcsm", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab=64, act="gelu", norm="layernorm",
+                       pattern=(HYENA,),
+                       hyena=HyenaConfig(n_filter_heads=2, filter_order=16,
+                                         filter_emb=9, distill_order=8),
+                       max_seq=512, dtype="float32")
+
+
+def _trees_equal(a, b):
+    return all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_write_cache_slots_dummy_rows_never_touch_the_pool():
+    """The batch-admission scatter must drop dummy rows by EXPLICIT mask.
+    Regression: with `.at[...].set(mode="drop")` the engine-side convention
+    (dummy rows point at slot index n_slots) relied on out-of-bounds scatter
+    semantics, which are not partition-stable — under a sharded pool each
+    partition sees shifted local indices, so a dummy row could clobber slot
+    0. A pure-dummy write must be a no-op, and mixed writes must touch only
+    their real slots."""
+    cfg = _tiny_cfg()
+    B, L = 4, 32
+    pool, _ = unzip(init_cache(cfg, B, L, per_slot=True))
+    pool = jax.tree.map(
+        lambda x: (jnp.arange(x.size, dtype=x.dtype).reshape(x.shape)
+                   if jnp.issubdtype(x.dtype, jnp.floating) else x), pool)
+    mk = lambda K: jax.tree.map(  # noqa: E731 — K-row batch of sevens
+        lambda x: jnp.full_like(x, 7),
+        unzip(init_cache(cfg, K, L, per_slot=True))[0])
+
+    # every row dummy (slot index == n_slots): the pool must be untouched
+    out = write_cache_slots(pool, mk(2), jnp.array([B, B], jnp.int32))
+    assert _trees_equal(out, pool)
+    # negative indices are dummies too
+    out = write_cache_slots(pool, mk(1), jnp.array([-1], jnp.int32))
+    assert _trees_equal(out, pool)
+
+    # mixed: row 0 -> slot 0 is written, the dummy row must not clobber
+    # slot 0 (the old mode="drop" bug) nor any other slot
+    out = write_cache_slots(pool, mk(2), jnp.array([0, B], jnp.int32))
+    rows = gather_cache_rows(out, jnp.arange(B))
+    want0 = gather_cache_rows(mk(2), jnp.array([0]))
+    got0 = gather_cache_rows(out, jnp.array([0]))
+    assert _trees_equal(got0, want0)
+    rest = gather_cache_rows(out, jnp.arange(1, B))
+    rest_ref = gather_cache_rows(pool, jnp.arange(1, B))
+    assert _trees_equal(rest, rest_ref)
+    assert rows is not None
+
+    # duplicate indices: a dummy duplicate of a real slot must lose
+    out = write_cache_slots(pool, mk(2), jnp.array([1, 1], jnp.int32))
+    got1 = gather_cache_rows(out, jnp.array([1]))
+    assert _trees_equal(got1, gather_cache_rows(mk(2), jnp.array([1])))
+
+
+def test_spec_window_syncs_is_a_resettable_resilience_counter():
+    from repro.serve.metrics import RESILIENCE_KEYS, ResilienceCounters
+    assert "spec_window_syncs" in RESILIENCE_KEYS
+    c = ResilienceCounters()
+    c.bump("spec_window_syncs", 3)
+    assert c.get("spec_window_syncs") == 3
+    assert c.snapshot()["spec_window_syncs"] == 3
+    c.reset()
+    assert c.get("spec_window_syncs") == 0
+    assert "spec_window_syncs" in c.snapshot()   # stable BENCH columns
+
+
+def test_sync_spec_len_bumps_stats_and_resilience():
+    from repro.serve.scheduler import ContinuousBatchingEngine
+    cfg = _tiny_cfg("shard-syncctr")
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=32)
+    eng._spec_win[0] = 2                  # dirty the host mirror
+    eng._sync_spec_len()
+    assert eng.stats["spec_window_syncs"] == 1
+    assert eng.resilience.get("spec_window_syncs") == 1
+    eng._sync_spec_len()                  # clean: no upload, no bump
+    assert eng.stats["spec_window_syncs"] == 1
+
+
+def test_checkpoint_format2_single_device_and_format1_compat():
+    """A single-device snapshot is format 2 with mesh=None, and a legacy
+    format-1 snapshot (no mesh entry) still restores on a single device."""
+    import pickle
+
+    from repro.serve.checkpoint import restore_engine, save_engine
+    from repro.serve.scheduler import ContinuousBatchingEngine
+    cfg = _tiny_cfg("shard-ckpt1")
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=32)
+    rng = np.random.default_rng(0)
+    eng.submit(rng.integers(0, cfg.vocab, size=5).astype(np.int32),
+               max_new_tokens=6)
+    eng.step()
+    # roundtrip: the live dict shares Request objects with the engine
+    state = pickle.loads(pickle.dumps(save_engine(eng)))
+    assert state["format"] == 2 and state["mesh"] is None
+
+    legacy = {k: v for k, v in state.items() if k != "mesh"}
+    legacy["format"] = 1
+    eng2 = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=32)
+    restore_engine(eng2, legacy)          # must not raise
+    while eng2.has_work:
+        eng2.step()
+    eng.run()
+    assert ([list(r.tokens) for r in eng2.finished]
+            == [list(r.tokens) for r in eng.finished])
+
+    bad = dict(state, format=99)
+    with pytest.raises(ValueError, match="format"):
+        restore_engine(eng2, bad)
