@@ -18,13 +18,17 @@ bench:
 
 # serving perf trajectory: tok/s (+ decode tok/s and speculative acceptance),
 # latency/TTFT percentiles, and prefill compile counts per mode, written to
-# BENCH_serve.json for cross-PR tracking
+# BENCH_serve.json for cross-PR tracking. Also measures the telemetry layer
+# (tracer + metrics) on vs off in the same run — the `observability` row —
+# and writes the telemetry-on request trace to BENCH_serve_trace.json
+# (Chrome-trace JSON; load in https://ui.perfetto.dev).
 bench-serve:
 	$(PY) -m benchmarks.run --only serve_stream --json BENCH_serve.json
 
 # regression gate: re-run the serving bench and compare against the
-# committed baseline (fails on a >15% tok/s drop or a speculative-decode
-# floor violation). CI uses this with the pre-bench copy as baseline.
+# committed baseline (fails on a >15% tok/s drop, a speculative-decode
+# floor violation, or >2% telemetry overhead on saturated decode).
+# CI uses this with the pre-bench copy as baseline.
 bench-check:
 	cp BENCH_serve.json /tmp/BENCH_baseline.json
 	$(MAKE) bench-serve

@@ -122,6 +122,57 @@ def _stream_case(cfg, params, mode, spec_k=0):
     return m
 
 
+# ---------------------------------------------------------------------------
+# Observability overhead: saturated decode with telemetry on vs off
+# ---------------------------------------------------------------------------
+SERVE_TRACE_OUT = "BENCH_serve_trace.json"   # uploaded by the bench-serve job
+
+
+def _observability_case(cfg, params):
+    """Measure the cost of the telemetry layer (metrics registry + span
+    tracer, both fully enabled) against a telemetry-dark engine
+    (MetricsRegistry(enabled=False), null tracer) on saturated decode.
+    check_regression gates the overhead at <= 2% with zero steady-state
+    compiles. Both engines share the jit memo, so the comparison is pure
+    host-side overhead; measurements interleave off/on twice and keep each
+    side's best to cancel drift, which on a noisy CPU runner matters more
+    than the overhead itself. The traced run's spans are saved to
+    SERVE_TRACE_OUT as the nightly trace artifact."""
+    from repro.serve.metrics import MetricsRegistry, count_compiles
+    from repro.serve.trace import Tracer
+    dark = ContinuousBatchingEngine(
+        params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN, mode="distilled",
+        max_prefills_per_step=PREFILL_BATCH,
+        metrics=MetricsRegistry(enabled=False))
+    tracer = Tracer()
+    lit = ContinuousBatchingEngine(
+        params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN, mode="distilled",
+        max_prefills_per_step=PREFILL_BATCH, tracer=tracer)
+    dark.warmup(PROMPT_LENS)
+    lit.warmup(PROMPT_LENS)
+    off = on = 0.0
+    compiles = 0
+    for _ in range(2):
+        off = max(off, measure_saturated_decode(
+            dark, prompt_len=32)["decode_tok_per_s"])
+        with count_compiles() as scope:
+            on = max(on, measure_saturated_decode(
+                lit, prompt_len=32)["decode_tok_per_s"])
+        compiles += scope.compiles
+    tracer.save(SERVE_TRACE_OUT)
+    return {
+        "decode_sat_tok_per_s_off": off,
+        "decode_sat_tok_per_s_on": on,
+        # positive = telemetry made saturated decode slower
+        "overhead_frac": (off - on) / off if off > 0 else 0.0,
+        "steady_state_compiles": compiles,
+        "trace_events": len(tracer),
+        "trace_dropped": tracer.dropped,
+        "trace_file": SERVE_TRACE_OUT,
+        "metric_series": len(lit.metrics.names()),
+    }
+
+
 # run in a fresh interpreter per device count: the device count is fixed
 # before jax imports. Prints one "RESULT {json}" line on success.
 _SCALE_SNIPPET = """
@@ -207,6 +258,17 @@ def stream_main(out):
                 f"prefill_exec={m['prefill_executables']}"
                 f"/{len(PROMPT_LENS)}lens "
                 f"compiles_in_run={m['steady_state_compiles']}" + extra))
+    # telemetry-on vs telemetry-off saturated decode (the <= 2% overhead
+    # gate) + the Chrome-trace artifact the CI job uploads
+    obs = _observability_case(hcfg, hparams)
+    results["observability"] = obs
+    out(row("serve_stream/observability", 0.0,
+            f"sat_decode_tok_s_on={obs['decode_sat_tok_per_s_on']:.0f} "
+            f"off={obs['decode_sat_tok_per_s_off']:.0f} "
+            f"overhead={obs['overhead_frac'] * 100:+.2f}% "
+            f"compiles_in_run={obs['steady_state_compiles']} "
+            f"trace_events={obs['trace_events']} "
+            f"metric_series={obs['metric_series']}"))
     # tok/s-vs-devices scaling of the sharded slot pool (fresh interpreter
     # per device count — see _SCALE_SNIPPET)
     scaling = [_scale_case(d) for d in SCALE_DEVICES]
@@ -247,14 +309,18 @@ CHAOS_WATCHDOG_S = 0.02
 CHAOS_SPEC_K = 4        # fixed config: the autotune sweep is not under test
 
 
-def _chaos_case(cfg, params, mode, spec_k=0):
+CHAOS_TRACE_OUT = "BENCH_chaos_trace.json"  # uploaded by the nightly job
+
+
+def _chaos_case(cfg, params, mode, spec_k=0, tracer=None):
     from repro.serve.faults import FaultInjector
     inj = FaultInjector(CHAOS_SCHEDULE["events"], seed=CHAOS_SCHEDULE["seed"])
     eng = ContinuousBatchingEngine(params, cfg, n_slots=N_SLOTS,
                                    max_len=MAX_LEN, mode=mode,
                                    max_prefills_per_step=PREFILL_BATCH,
                                    spec_k=spec_k, fault_injector=inj,
-                                   watchdog_s=CHAOS_WATCHDOG_S)
+                                   watchdog_s=CHAOS_WATCHDOG_S,
+                                   tracer=tracer)
     eng.warmup(PROMPT_LENS)
     stream = synthesize_request_stream(
         np.random.default_rng(0), N_REQ, rate=RATE, prompt_lens=PROMPT_LENS,
@@ -289,7 +355,17 @@ def chaos_main(out):
             ("distilled_spec", hcfg, hparams, "distilled", CHAOS_SPEC_K),
             ("cached_conv", hcfg, hparams, "cached_conv", 0),
             ("attention_kv", tcfg, tparams, "distilled", 0)):
-        m = _chaos_case(cfg, params, mode, spec_k=spec)
+        # trace the distilled case: its exported timeline shows each faulted
+        # request's quarantine -> re-prefill -> retire arc (nightly artifact)
+        tracer = None
+        if label == "distilled":
+            from repro.serve.trace import Tracer
+            tracer = Tracer()
+        m = _chaos_case(cfg, params, mode, spec_k=spec, tracer=tracer)
+        if tracer is not None:
+            tracer.save(CHAOS_TRACE_OUT)
+            m["trace_file"] = CHAOS_TRACE_OUT
+            m["trace_events"] = len(tracer)
         results["modes"][label] = m
         out(row(f"serve_chaos/{label}", m["wall_s"] * 1e6,
                 f"completed={m['n_completed']}/{m['n_requests_expected']} "

@@ -32,6 +32,13 @@ compiles; throughputs are threshold-compared per device count only when the
 baseline carries the same row, so baselines predating the sweep gate
 nothing and never fail.
 
+Observability gate: the `serve_stream.observability` row measures saturated
+decode with the telemetry layer (span tracer + metrics registry) fully on
+vs fully off in the same run; the on side must stay within `--obs-overhead`
+(default 2%) of the off side with zero steady-state compiles. Same-run
+ratio, so it is machine-independent like the spec gate; bench files
+predating the row are skipped, not failed.
+
 A markdown comparison table (old -> new tok/s per mode, acceptance, tokens
 per round) is appended to `--summary` when given, else to the file named by
 $GITHUB_STEP_SUMMARY when set — so spec perf is visible on every PR's
@@ -120,6 +127,62 @@ def _scaling_table(base: Dict[int, Dict[str, Any]],
             f"{_fmt(_num(nm, 'decode_sat_tok_per_s'))} "
             f"| {_fmt(_num(nm, 'steady_state_compiles'), '.0f')} |")
     return lines
+
+
+def _observability(doc) -> Dict[str, Any]:
+    """The telemetry-overhead row. Empty for files that predate the
+    observability layer — callers must not fail on those."""
+    obs = doc.get("serve_stream", {}).get("observability", {})
+    return obs if isinstance(obs, dict) else {}
+
+
+def _check_observability(obs: Dict[str, Any], max_overhead: float,
+                         failures: List[str]) -> None:
+    """Gate the telemetry layer: with tracing + metrics fully enabled,
+    saturated decode must stay within `max_overhead` of the telemetry-off
+    engine in the SAME run (machine-independent ratio), with zero
+    steady-state compiles. Baselines without the row gate nothing."""
+    if not obs:
+        print("[bench-check] observability: no row in the new run "
+              "(pre-observability bench file) — skipping")
+        return
+    off = _num(obs, "decode_sat_tok_per_s_off")
+    on = _num(obs, "decode_sat_tok_per_s_on")
+    if off is None or on is None or off <= 0:
+        failures.append("observability: on/off saturated decode tok/s "
+                        "missing from the row")
+        return
+    overhead = (off - on) / off
+    status = "ok" if overhead <= max_overhead else "TOO SLOW"
+    print(f"[bench-check] observability telemetry-on {on:.1f} vs off "
+          f"{off:.1f} tok/s ({overhead:+.2%} overhead, "
+          f"max {max_overhead:.0%}) {status}")
+    if overhead > max_overhead:
+        failures.append(
+            f"observability: telemetry costs {overhead:.2%} of saturated "
+            f"decode ({off:.1f} -> {on:.1f} tok/s), over the "
+            f"{max_overhead:.0%} budget")
+    compiles = _num(obs, "steady_state_compiles")
+    if compiles is None or compiles != 0:
+        failures.append(f"observability: {compiles} steady-state compiles "
+                        f"with telemetry on (must be zero)")
+
+
+def _observability_table(obs: Dict[str, Any]) -> List[str]:
+    if not obs:
+        return []
+    off = _num(obs, "decode_sat_tok_per_s_off")
+    on = _num(obs, "decode_sat_tok_per_s_on")
+    ovh = ((off - on) / off if off and on is not None else None)
+    return ["", "### Observability overhead", "",
+            "| sat decode tok/s (off → on) | overhead | compiles "
+            "| trace events | metric series |",
+            "|---|---|---|---|---|",
+            f"| {_fmt(off)} → {_fmt(on)} "
+            f"| {_fmt(None if ovh is None else 100 * ovh, '+.2f')}% "
+            f"| {_fmt(_num(obs, 'steady_state_compiles'), '.0f')} "
+            f"| {_fmt(_num(obs, 'trace_events'), '.0f')} "
+            f"| {_fmt(_num(obs, 'metric_series'), '.0f')} |"]
 
 
 def _num(m: Dict[str, Any], key: str) -> Optional[float]:
@@ -248,6 +311,11 @@ def main() -> int:
                          "this ratio times new-run plain distilled decode "
                          "tok/s, on the saturated metric when both report "
                          "it (0 disables)")
+    ap.add_argument("--obs-overhead", type=float, default=0.02,
+                    help="max tolerated saturated-decode slowdown with "
+                         "telemetry (tracing + metrics) enabled, same-run "
+                         "on-vs-off ratio (0 disables; files without the "
+                         "observability row are skipped, not failed)")
     ap.add_argument("--summary", type=str, default=None,
                     help="append the markdown comparison table to this file "
                          "(default: $GITHUB_STEP_SUMMARY when set)")
@@ -315,7 +383,12 @@ def main() -> int:
     if args.baseline:
         _check_scaling(base_scaling, new_scaling, args.threshold, failures)
 
+    new_obs = _observability(new_doc) if args.baseline else {}
+    if args.baseline and args.obs_overhead > 0:
+        _check_observability(new_obs, args.obs_overhead, failures)
+
     lines = _summary_table(base, new) if args.baseline else []
+    lines += _observability_table(new_obs)
     lines += _scaling_table(base_scaling, new_scaling)
     if args.chaos:
         with open(args.chaos) as f:

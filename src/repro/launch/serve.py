@@ -23,6 +23,13 @@ For LCSM archs, --distill runs LaughingHyena distillation before serving
 (recurrent O(d) decode); without it the model still serves via the distilled
 slot's random init (useless outputs) — so in practice always pass --distill
 or a --ckpt of a trained+distilled model.
+
+Observability (serve/README.md "Observability"): --metrics-port N serves the
+engine's live metrics registry over HTTP while the stream runs (/metrics
+Prometheus text, /metrics.json snapshot, /trace.json live trace);
+--trace-out FILE records host-phase + request-lifecycle spans and writes a
+Chrome-trace JSON to open in Perfetto; --events-limit bounds the recovery-
+event ring.
 """
 from __future__ import annotations
 
@@ -120,6 +127,20 @@ def main():
                     help="resume from an engine checkpoint written by "
                          "serve.checkpoint.save_engine (bit-exact for "
                          "resident slots)")
+    # observability (serve/README.md "Observability")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the engine's metrics registry over HTTP on "
+                         "this port while the stream runs (/metrics "
+                         "Prometheus text, /metrics.json snapshot, "
+                         "/trace.json live Chrome trace; 0 picks a free "
+                         "port)")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="record request-lifecycle + host-phase spans and "
+                         "write a Chrome-trace JSON here at the end (open "
+                         "in https://ui.perfetto.dev)")
+    ap.add_argument("--events-limit", type=int, default=256,
+                    help="ring-buffer capacity of the recovery-event log "
+                         "(0 = unbounded)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -170,6 +191,10 @@ def _serve_stream(params, cfg, args):
         injector = FaultInjector.from_json(args.fault_schedule)
         print(f"[serve] fault schedule: {len(injector.events)} events "
               f"(seed {injector.seed})")
+    tracer = None
+    if args.trace_out:
+        from repro.serve.trace import Tracer
+        tracer = Tracer()
     eng = ContinuousBatchingEngine(params, cfg, n_slots=args.slots,
                                    max_len=max_len, mode=args.mode,
                                    seed=args.seed,
@@ -183,7 +208,20 @@ def _serve_stream(params, cfg, args):
                                    deadline_s=(args.deadline_ms / 1e3
                                                if args.deadline_ms else None),
                                    max_queue=args.max_queue,
-                                   fault_injector=injector)
+                                   fault_injector=injector,
+                                   tracer=tracer,
+                                   events_limit=args.events_limit or None)
+    server = None
+    if args.metrics_port is not None:
+        from repro.serve.metrics import start_metrics_server
+        server = start_metrics_server(
+            eng.metrics, args.metrics_port, tracer=eng.tracer,
+            extra=lambda: {"stats": dict(eng.stats),
+                           "resilience": eng.resilience.snapshot(),
+                           "tick": eng._tick})
+        print(f"[serve] metrics endpoint: "
+              f"http://{server.server_address[0]}:{server.server_address[1]}"
+              f"/metrics (also /metrics.json, /trace.json)")
     if args.restore:
         from repro.serve.checkpoint import restore_engine
         restore_engine(eng, args.restore)
@@ -234,11 +272,21 @@ def _serve_stream(params, cfg, args):
         print(f"[serve] resilience: {m['n_errors']} error completions, "
               f"counters {res}")
     if eng.events:
-        print(f"[serve] recovery events ({len(eng.events)}):")
+        dropped = eng._events_total - len(eng.events)
+        print(f"[serve] recovery events ({len(eng.events)} of "
+              f"{eng._events_total} retained):" if dropped
+              else f"[serve] recovery events ({len(eng.events)}):")
         for ev in eng.events:
             detail = {k: v for k, v in ev.items()
                       if k not in ("tick", "kind")}
             print(f"  tick {ev['tick']:>5}  {ev['kind']:<16} {detail}")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"[serve] wrote trace ({len(tracer)} events, "
+              f"{tracer.dropped} dropped) to {args.trace_out} — open in "
+              f"https://ui.perfetto.dev")
+    if server is not None:
+        server.shutdown()
 
 
 if __name__ == "__main__":

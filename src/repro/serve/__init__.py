@@ -1,6 +1,10 @@
 from repro.serve.engine import GenerationEngine                    # noqa: F401
+from repro.serve.metrics import (MetricsRegistry, count_compiles,  # noqa: F401
+                                 speculative_summary,
+                                 start_metrics_server)
 from repro.serve.sampling import sample_token, sample_token_slots  # noqa: F401
 from repro.serve.scheduler import (ContinuousBatchingEngine,       # noqa: F401
                                    Request, SamplingParams,
                                    run_request_stream,
                                    synthesize_request_stream)
+from repro.serve.trace import NULL_TRACER, Tracer                  # noqa: F401

@@ -112,11 +112,14 @@ def jitted_finalize_prefill(cfg: ModelConfig, max_len: int,
 
 class GenerationEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_len: int = 4096,
-                 ctx: ShardCtx = NOCTX, mode: str = "distilled"):
+                 ctx: ShardCtx = NOCTX, mode: str = "distilled",
+                 tracer=None):
         if mode not in ("distilled", "cached_conv"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "cached_conv" and cfg.hyena is None:
             raise ValueError("cached_conv mode requires a Hyena (LCSM) arch")
+        from repro.serve.trace import NULL_TRACER
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -134,8 +137,10 @@ class GenerationEngine:
                  frontend: Optional[jnp.ndarray] = None
                  ) -> Tuple[jnp.ndarray, Dict]:
         """prompt: (B, T) int32 -> (B, n_tokens) generated ids."""
-        cache, last_logits = self._prefill(self.params, prompt,
-                                           frontend=frontend)
+        tr = self.tracer
+        with tr.device_span("prefill", tokens=int(prompt.shape[-1])):
+            cache, last_logits = self._prefill(self.params, prompt,
+                                               frontend=frontend)
         toks = []
         logits = last_logits
         for i in range(n_tokens):
@@ -143,8 +148,9 @@ class GenerationEngine:
             nxt = sample_token(sub, logits, temperature=temperature,
                                top_k=top_k, top_p=top_p)
             toks.append(nxt)
-            cache, logits = self._decode(self.params, cache, nxt[:, None],
-                                         conv_filters=self._conv_filters)
+            with tr.device_span("decode_step"):
+                cache, logits = self._decode(self.params, cache, nxt[:, None],
+                                             conv_filters=self._conv_filters)
             logits = logits[:, 0, :]
         return jnp.stack(toks, axis=1), {"cache_bytes": _tree_bytes(cache)}
 

@@ -69,8 +69,10 @@ from repro.models.model import (init_cache, init_prefill_cache,
                                 reset_cache_slot, slot_health,
                                 write_cache_slot, write_cache_slots)
 from repro.serve.faults import FaultError, corrupt_cache_slot
-from repro.serve.metrics import ResilienceCounters
+from repro.serve.metrics import (MetricsRegistry, RATIO_BUCKETS,
+                                 ResilienceCounters, WINDOW_BUCKETS)
 from repro.serve.sampling import sample_token_slots
+from repro.serve.trace import NULL_TRACER
 from repro.serve.speculative import DRAW_TAG, token_keys
 
 QUEUED, PREFILLING, RUNNING, FINISHED, ERROR = (
@@ -255,6 +257,14 @@ class ContinuousBatchingEngine:
     `deadline_s` / `max_queue` give per-request deadlines and bounded-queue
     backpressure; `watchdog_s` flags slow host ticks; `fault_injector`
     (serve/faults.FaultInjector) drives scripted chaos schedules.
+
+    Observability knobs (serve/README.md "Observability"): `metrics` binds
+    a serve.metrics.MetricsRegistry (one is created, enabled, when omitted
+    — pass MetricsRegistry(enabled=False) to opt out); `tracer` binds a
+    serve.trace.Tracer recording host-phase and request-lifecycle spans
+    (default: the no-op NULL_TRACER); `events_limit` bounds the recovery-
+    event log `self.events` as a ring buffer (None = unbounded,
+    `self._events_total` counts everything ever recorded).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
@@ -276,7 +286,9 @@ class ContinuousBatchingEngine:
                  deadline_s: Optional[float] = None,
                  max_queue: Optional[int] = None,
                  watchdog_s: Optional[float] = None,
-                 fault_injector=None):
+                 fault_injector=None, tracer=None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 events_limit: Optional[int] = 256):
         if mode not in ("distilled", "cached_conv"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "cached_conv" and cfg.hyena is None:
@@ -334,6 +346,40 @@ class ContinuousBatchingEngine:
             # tree mixed with a sharded pool in one jit is a placement error
             params = jax.device_put(params, NamedSharding(mesh, P()))
         self.params = params
+        # --- observability (serve/README.md "Observability") ---
+        # the registry is always present and enabled by default: instrument
+        # bumps are plain host-side python mirroring the stats-dict
+        # increments; the tracer defaults to the shared no-op. Both are held
+        # to <= 2% saturated-decode overhead by the `observability` row in
+        # BENCH_serve.json (benchmarks/check_regression.py gate).
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        _m = self.metrics
+        self._mc: Dict[str, Any] = {}    # stats-dict key -> mirror counter
+        self._h_tick = _m.histogram("serve_tick_latency_s",
+                                    help="host-loop tick latency")
+        self._h_ttft = _m.histogram("serve_ttft_s",
+                                    help="submit -> first token")
+        self._h_latency = _m.histogram(
+            "serve_request_latency_s",
+            help="submit -> finished, ok requests only")
+        self._h_fill = _m.histogram("serve_batch_fill_ratio", RATIO_BUCKETS,
+                                    help="active slots / n_slots per tick")
+        self._h_spec_win = _m.histogram(
+            "serve_spec_window", WINDOW_BUCKETS,
+            help="per-slot speculation window at dispatch")
+        self._g_queue = _m.gauge("serve_queue_depth")
+        self._g_active = _m.gauge("serve_active_slots")
+        self._g_shard_occ = [
+            _m.gauge(f"serve_shard_occupancy_{s}",
+                     help="live slots resident on this mesh shard")
+            for s in range(self._n_shards)]
+        self._c_finished = _m.counter("serve_requests_finished")
+        self._c_errors = _m.counter(
+            "serve_requests_error", help="rejected / deadline / poisoned")
+        self._c_events = _m.counter(
+            "serve_events_total",
+            help="recovery-log events (the `events` ring drops the oldest)")
         self.cache, self._cache_sh = self._make_pool(cfg, cache_kind)
         self._draft_sh = None
         self._meta = _jitted("slot_meta", _update_slot_meta,
@@ -441,7 +487,7 @@ class ContinuousBatchingEngine:
                 ctl_cfg = (spec_adapt if isinstance(
                     spec_adapt, spec_mod.SpecControllerConfig) else None)
                 self._spec_ctl = spec_mod.SlotSpecController(
-                    n_slots, self._spec_k, ctl_cfg)
+                    n_slots, self._spec_k, ctl_cfg, metrics=self.metrics)
         # per-slot host-side bookkeeping; sampling params, last token, PRNG
         # keys, stream counters and speculation windows live on device so the
         # overlapped loop never waits on a host upload
@@ -513,8 +559,14 @@ class ContinuousBatchingEngine:
         self._max_queue = max_queue
         self._watchdog_s = watchdog_s
         self._injector = fault_injector
-        self.resilience = ResilienceCounters()
-        self.events: List[Dict[str, Any]] = []   # recovery-event log
+        self.resilience = ResilienceCounters(registry=self.metrics)
+        # recovery-event log: bounded ring (oldest dropped past
+        # events_limit; None = unbounded). serve_events_total /
+        # _events_total count every event ever recorded, and with a live
+        # tracer each event also lands as an instant on the owning
+        # request's trace track
+        self.events: Deque[Dict[str, Any]] = deque(maxlen=events_limit)
+        self._events_total = 0
 
     # ------------------------------------------------------------------
     # slot-pool sharding (see serve/README.md "Sharded slot pool")
@@ -749,19 +801,25 @@ class ContinuousBatchingEngine:
         (the original loop). Returns the number of tokens appended to
         requests during this call."""
         self._tick += 1
+        tr = self.tracer
         t_step0 = self._clock()
         if self._injector is not None:
-            self._apply_scheduled_faults()
+            with tr.span("faults"):
+                self._apply_scheduled_faults()
         dispatch = self._dispatch_spec if self._spec else self._dispatch_decode
         prev, self._pending = self._pending, None
         if self._overlap and self.n_active > 0:
-            self._pending = self._safe_dispatch(dispatch)
-        emitted = self._retire(prev)
+            with tr.span("dispatch"):
+                self._pending = self._safe_dispatch(dispatch)
+        with tr.span("retire"):
+            emitted = self._retire(prev)
         if self._any_deadline:
-            self._sweep_deadlines()
+            with tr.span("deadline_sweep"):
+                self._sweep_deadlines()
         t0 = self._clock()
         work0 = self.stats["prefill_calls"] + self.stats["chunk_steps"]
-        emitted += self._admit_phase()
+        with tr.span("admit"):
+            emitted += self._admit_phase()
         if self.stats["prefill_calls"] + self.stats["chunk_steps"] > work0:
             # only admission phases that actually prefilled count toward
             # t_admit; note that with the overlapped loop part of this host
@@ -769,12 +827,27 @@ class ContinuousBatchingEngine:
             # decode_tok_per_s is an upper bound on pure-decode throughput
             self.t_admit += self._clock() - t0
         if not self._overlap and self.n_active > 0:
-            emitted += self._retire(self._safe_dispatch(dispatch))
-        if self._watchdog_s is not None:
-            lat = self._clock() - t_step0
-            if lat > self._watchdog_s:
-                self.resilience.bump("watchdog_trips")
-                self._record_event("watchdog", latency_s=round(lat, 4))
+            with tr.span("dispatch"):
+                pend = self._safe_dispatch(dispatch)
+            with tr.span("retire"):
+                emitted += self._retire(pend)
+        # per-tick telemetry: the tick-latency histogram is what the
+        # watchdog reads, so its cost is the one clock call either way
+        lat = self._clock() - t_step0
+        self._h_tick.observe(lat)
+        n_act = self.n_active
+        self._g_queue.set(len(self.queue))
+        self._g_active.set(n_act)
+        self._h_fill.observe(n_act / self.n_slots)
+        if self._n_shards > 1:
+            occ = [0] * self._n_shards
+            for b in np.nonzero(self.active)[0]:
+                occ[self._shard_of(int(b))] += 1
+            for g, n in zip(self._g_shard_occ, occ):
+                g.set(n)
+        if self._watchdog_s is not None and lat > self._watchdog_s:
+            self.resilience.bump("watchdog_trips")
+            self._record_event("watchdog", latency_s=round(lat, 4))
         return emitted
 
     # ------------------------------------------------------------------
@@ -782,6 +855,25 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     def _record_event(self, kind: str, **detail) -> None:
         self.events.append({"tick": self._tick, "kind": kind, **detail})
+        self._events_total += 1
+        self._c_events.inc()
+        tr = self.tracer
+        if tr.enabled:
+            # fold the recovery stream into the trace: rid-carrying events
+            # land on the request's own track, the rest on the host track
+            tr.instant(kind, cat="recovery", rid=detail.get("rid"),
+                       tick=self._tick,
+                       **{k: v for k, v in detail.items() if k != "rid"})
+
+    def _bump_stat(self, key: str, n: int = 1) -> None:
+        """Increment a stats-dict counter and its mirrored registry counter
+        (the dict stays the cheap delta the benches take; the registry
+        carries the same series as `serve_<key>` for exposition)."""
+        self.stats[key] += n
+        c = self._mc.get(key)
+        if c is None:
+            c = self._mc[key] = self.metrics.counter("serve_" + key)
+        c.inc(n)
 
     def _apply_scheduled_faults(self) -> None:
         """Fire this tick's scripted faults (corrupt / expire / stall); the
@@ -1019,21 +1111,22 @@ class ContinuousBatchingEngine:
         retired after the NEXT dispatch."""
         self._dispatch_seq += 1
         health = None
-        if self._guard and self._tick % self._health_every == 0:
-            # fused variant: the integrity reduction rides the decode
-            # executable — no extra host dispatch on the hot path
-            self.cache, logits, health = self._decode_g(
-                self.params, self.cache, self._last[:, None],
-                self._state_bound, conv_filters=self._conv_filters)
-        else:
-            self.cache, logits = self._decode(self.params, self.cache,
-                                              self._last[:, None],
-                                              conv_filters=self._conv_filters)
-        nxt, self._tok_idx = self._stream_sample(
-            self._slot_keys, self._tok_idx, logits[:, 0, :], self._temps,
-            self._top_ks, self._top_ps)
+        with self.tracer.device_span("decode_step"):
+            if self._guard and self._tick % self._health_every == 0:
+                # fused variant: the integrity reduction rides the decode
+                # executable — no extra host dispatch on the hot path
+                self.cache, logits, health = self._decode_g(
+                    self.params, self.cache, self._last[:, None],
+                    self._state_bound, conv_filters=self._conv_filters)
+            else:
+                self.cache, logits = self._decode(
+                    self.params, self.cache, self._last[:, None],
+                    conv_filters=self._conv_filters)
+            nxt, self._tok_idx = self._stream_sample(
+                self._slot_keys, self._tok_idx, logits[:, 0, :], self._temps,
+                self._top_ks, self._top_ps)
         self._last = nxt
-        self.stats["decode_steps"] += 1
+        self._bump_stat("decode_steps")
         snapshot = [(int(b), self.slots[b], 1)
                     for b in np.nonzero(self.active)[0]]
         try:
@@ -1055,7 +1148,7 @@ class ContinuousBatchingEngine:
             self._spec_len = self._put_slot_vec(
                 np.asarray(self._spec_win, np.int32))
             self._spec_win_dev[:] = self._spec_win
-            self.stats["spec_window_syncs"] += 1
+            self._bump_stat("spec_window_syncs")
             self.resilience.bump("spec_window_syncs")
 
     def _dispatch_spec(self):
@@ -1080,28 +1173,30 @@ class ContinuousBatchingEngine:
         self._dispatch_seq += 1
         self._sync_spec_len()
         K_r = next(L for L in self._spec_levels if L >= need)
-        (self.cache, new_draft, emitted, n_emit, last, tok_idx) = \
-            self._spec_rounds[K_r](
-                self.params, self._draft_params, self.cache,
-                self._last, self._spec_len,
-                None if self._draft_shared else self.draft_cache,
-                temperature=self._temps,
-                top_k=self._top_ks, top_p=self._top_ps,
-                slot_keys=self._slot_keys,
-                tok_idx=self._tok_idx,
-                conv_filters=self._conv_filters)
+        with self.tracer.device_span("spec_round", depth=K_r):
+            (self.cache, new_draft, emitted, n_emit, last, tok_idx) = \
+                self._spec_rounds[K_r](
+                    self.params, self._draft_params, self.cache,
+                    self._last, self._spec_len,
+                    None if self._draft_shared else self.draft_cache,
+                    temperature=self._temps,
+                    top_k=self._top_ks, top_p=self._top_ps,
+                    slot_keys=self._slot_keys,
+                    tok_idx=self._tok_idx,
+                    conv_filters=self._conv_filters)
         if not self._draft_shared:
             self.draft_cache = new_draft
         self._last, self._tok_idx = last, tok_idx
-        self.stats["decode_steps"] += 1
-        self.stats["spec_rounds"] += 1
+        self._bump_stat("decode_steps")
+        self._bump_stat("spec_rounds")
         snapshot = []
         for b in act:
             req = self.slots[b]
             win = int(self._spec_win[b])
             if req is not None and req.spec and win > 1:
-                self.stats["spec_drafted"] += win - 1
-                self.stats["spec_slot_rounds"] += 1
+                self._bump_stat("spec_drafted", win - 1)
+                self._bump_stat("spec_slot_rounds")
+                self._h_spec_win.observe(win)
             snapshot.append((int(b), req, win))
         health = None
         if self._guard and self._tick % self._health_every == 0:
@@ -1129,6 +1224,8 @@ class ContinuousBatchingEngine:
         n_emit = None if n_emit_dev is None else np.asarray(n_emit_dev)
         health = None if health_dev is None else np.asarray(health_dev)
         emitted = 0
+        tr = self.tracer
+        tr_on = tr.enabled
         for b, req, win in snapshot:
             # slot may have been evicted (and even re-admitted) since this
             # tick was dispatched — its speculative token is dropped (the
@@ -1152,6 +1249,8 @@ class ContinuousBatchingEngine:
             if n_emit is None:
                 self._append_token(b, int(toks[b]))
                 emitted += 1
+                if tr_on:
+                    tr.instant("decode_tick", cat="decode", rid=req.rid)
                 continue
             n = int(n_emit[b])
             applied = 0
@@ -1161,13 +1260,16 @@ class ContinuousBatchingEngine:
                 emitted += 1
                 if self.slots[b] is not req or req.status != RUNNING:
                     break                      # evicted mid-speculation
+            if tr_on and applied:
+                tr.instant("spec_round" if win > 1 else "decode_tick",
+                           cat="decode", rid=req.rid, emitted=applied)
             if req.spec and win > 1:
                 # count only DELIVERED accepted drafts: tokens truncated by
                 # an EOS/max-tokens eviction never reached the request. A
                 # full delivery ends with the correction token (applied - 1
                 # drafts); a truncated one delivered accepted drafts only.
-                self.stats["spec_accepted"] += (applied - 1 if applied == n
-                                                else applied)
+                self._bump_stat("spec_accepted", (applied - 1 if applied == n
+                                                  else applied))
                 if self._spec_ctl is not None and self.slots[b] is req:
                     # feed the controller the round's raw acceptance (n - 1
                     # of win - 1 drafts accepted, eviction or not); skip if
@@ -1254,37 +1356,43 @@ class ContinuousBatchingEngine:
                      bucket: Optional[int]) -> int:
         """Prefill `reqs` together and scatter into `slots`. bucket=None is
         the legacy exact-length batch=1 path (bucket_prompts=False)."""
+        dspan = self.tracer.device_span("prefill", n=len(reqs),
+                                        bucket=bucket or 0)
         if bucket is None:
-            prompt = jnp.asarray(self._eff_prompt(reqs[0]), jnp.int32)[None]
-            cache1, logits = self._prefill(self.params, prompt)
-            self.cache = self._write_slot(self.cache, cache1, slots[0])
-            if self._spec and not self._draft_shared:
-                dc1, _ = self._draft_prefill(self._draft_params, prompt)
-                self.draft_cache = self._write_slot_d(self.draft_cache, dc1,
-                                                      slots[0])
+            with dspan:
+                prompt = jnp.asarray(self._eff_prompt(reqs[0]),
+                                     jnp.int32)[None]
+                cache1, logits = self._prefill(self.params, prompt)
+                self.cache = self._write_slot(self.cache, cache1, slots[0])
+                if self._spec and not self._draft_shared:
+                    dc1, _ = self._draft_prefill(self._draft_params, prompt)
+                    self.draft_cache = self._write_slot_d(self.draft_cache,
+                                                          dc1, slots[0])
         else:
-            K = self._prefill_batch
-            toks = np.zeros((K, bucket), np.int32)
-            lens = np.full((K,), bucket, np.int32)     # dummy rows: full
-            slot_idx = np.full((K,), self.n_slots, np.int32)  # dummies drop
-            for j, (req, slot) in enumerate(zip(reqs, slots)):
-                ep = self._eff_prompt(req)
-                toks[j, :len(ep)] = ep
-                lens[j] = len(ep)
-                slot_idx[j] = slot
-            cache1, logits = self._prefill(self.params, jnp.asarray(toks),
-                                           lengths=jnp.asarray(lens))
-            self.cache = self._write_slots(self.cache, cache1,
-                                           jnp.asarray(slot_idx))
-            if self._spec and not self._draft_shared:
-                dc1, _ = self._draft_prefill(self._draft_params,
-                                             jnp.asarray(toks),
-                                             lengths=jnp.asarray(lens))
-                self.draft_cache = self._write_slots_d(self.draft_cache, dc1,
-                                                       jnp.asarray(slot_idx))
+            with dspan:
+                K = self._prefill_batch
+                toks = np.zeros((K, bucket), np.int32)
+                lens = np.full((K,), bucket, np.int32)     # dummy rows: full
+                slot_idx = np.full((K,), self.n_slots,
+                                   np.int32)               # dummies drop
+                for j, (req, slot) in enumerate(zip(reqs, slots)):
+                    ep = self._eff_prompt(req)
+                    toks[j, :len(ep)] = ep
+                    lens[j] = len(ep)
+                    slot_idx[j] = slot
+                cache1, logits = self._prefill(self.params, jnp.asarray(toks),
+                                               lengths=jnp.asarray(lens))
+                self.cache = self._write_slots(self.cache, cache1,
+                                               jnp.asarray(slot_idx))
+                if self._spec and not self._draft_shared:
+                    dc1, _ = self._draft_prefill(self._draft_params,
+                                                 jnp.asarray(toks),
+                                                 lengths=jnp.asarray(lens))
+                    self.draft_cache = self._write_slots_d(
+                        self.draft_cache, dc1, jnp.asarray(slot_idx))
             self._buckets_used.add(bucket)
-        self.stats["prefills"] += len(reqs)
-        self.stats["prefill_calls"] += 1
+        self._bump_stat("prefills", len(reqs))
+        self._bump_stat("prefill_calls")
         return self._register_admissions(reqs, slots, logits)
 
     def _register_admissions(self, reqs: List[Request], slots: List[int],
@@ -1348,7 +1456,7 @@ class ContinuousBatchingEngine:
                 req.t_admitted = now
             self.slots[slot] = req
             self.active[slot] = True
-            self.stats["admitted"] += 1
+            self._bump_stat("admitted")
             if resume[j]:
                 continue          # recovery: no new token at re-admission
             # first generated token comes from the prefill logits (same
@@ -1402,15 +1510,18 @@ class ContinuousBatchingEngine:
         cl = min(C, plen - st["start"])
         buf = np.zeros((1, C), np.int32)
         buf[0, :cl] = prompt[st["start"]:st["start"] + cl]
-        st["pcache"], last_logits = self._prefill_chunk(
-            self.params, st["pcache"], jnp.asarray(buf), st["start"],
-            chunk_len=cl, conv_filters=self._chunk_filters)
-        if self._spec and not self._draft_shared:
-            st["dcache"], _ = self._draft_prefill_chunk(
-                self._draft_params, st["dcache"], jnp.asarray(buf),
-                st["start"], chunk_len=cl, conv_filters=self._chunk_filters)
+        with self.tracer.device_span("prefill_chunk", rid=req.rid,
+                                     start=st["start"]):
+            st["pcache"], last_logits = self._prefill_chunk(
+                self.params, st["pcache"], jnp.asarray(buf), st["start"],
+                chunk_len=cl, conv_filters=self._chunk_filters)
+            if self._spec and not self._draft_shared:
+                st["dcache"], _ = self._draft_prefill_chunk(
+                    self._draft_params, st["dcache"], jnp.asarray(buf),
+                    st["start"], chunk_len=cl,
+                    conv_filters=self._chunk_filters)
         st["start"] += cl
-        self.stats["chunk_steps"] += 1
+        self._bump_stat("chunk_steps")
         if st["start"] < plen:
             return 0
         dcache = self._finalize(st["pcache"], plen)
@@ -1419,8 +1530,8 @@ class ContinuousBatchingEngine:
         if self._spec and not self._draft_shared:
             ddc = self._draft_finalize(st["dcache"], plen)
             self.draft_cache = self._write_slot_d(self.draft_cache, ddc, slot)
-        self.stats["prefills"] += 1
-        self.stats["prefill_calls"] += 1
+        self._bump_stat("prefills")
+        self._bump_stat("prefill_calls")
         self._chunk_state = None
         self.slots[slot] = None                 # _register re-claims it
         return self._register_admissions([req], [slot], last_logits)
@@ -1453,6 +1564,33 @@ class ContinuousBatchingEngine:
         if self._spec_ctl is not None:
             self._spec_ctl.evict(slot)
 
+    def _trace_request(self, req: Request) -> None:
+        """Emit the request's lifecycle spans from its own recorded
+        timestamps at its terminal transition: queue_wait
+        [t_submit, t_admitted], prefill [t_admitted, t_first_token], decode
+        [t_first_token, t_finished], plus a `retire` instant. TTFT is
+        queue_wait + prefill and end-to-end latency is the full span chain
+        — the trace reconstructs the measured numbers exactly, by
+        construction. Stages a request never reached (errored while queued
+        or prefilling) are simply absent."""
+        tr = self.tracer
+        if not tr.enabled or math.isnan(req.t_submit):
+            return
+        rid, t_end = req.rid, req.t_finished
+        if math.isnan(req.t_admitted):
+            tr.complete("queue_wait", req.t_submit, t_end, rid=rid)
+        else:
+            tr.complete("queue_wait", req.t_submit, req.t_admitted, rid=rid)
+            t_first = req.t_first_token
+            if math.isnan(t_first):
+                tr.complete("prefill", req.t_admitted, t_end, rid=rid)
+            else:
+                tr.complete("prefill", req.t_admitted, t_first, rid=rid)
+                tr.complete("decode", t_first, t_end, rid=rid,
+                            tokens=len(req.tokens))
+        tr.instant("retire", rid=rid, ts=t_end, reason=req.finish_reason,
+                   status=req.status)
+
     def _evict(self, slot: int, reason: str) -> None:
         req = self.slots[slot]
         req.status = FINISHED
@@ -1460,8 +1598,14 @@ class ContinuousBatchingEngine:
         req.t_finished = self._clock()
         req.slot = -1
         self._release_slot(slot)
-        self.stats["evicted"] += 1
+        self._bump_stat("evicted")
         self.finished.append(req)
+        self._c_finished.inc()
+        if not math.isnan(req.t_submit):
+            self._h_latency.observe(req.latency)
+            if not math.isnan(req.t_first_token):
+                self._h_ttft.observe(req.ttft)
+        self._trace_request(req)
         if self.reset_on_evict:
             self.cache = self._reset_slot(self.cache, slot)
             if self._spec and not self._draft_shared:
@@ -1479,12 +1623,14 @@ class ContinuousBatchingEngine:
             pass
         if 0 <= req.slot < self.n_slots and self.slots[req.slot] is req:
             self._release_slot(req.slot)
-            self.stats["evicted"] += 1
+            self._bump_stat("evicted")
         req.status = ERROR
         req.finish_reason = reason
         req.t_finished = self._clock()
         req.slot = -1
         self.finished.append(req)
+        self._c_errors.inc()
+        self._trace_request(req)
 
     def _requeue_for_recovery(self, req: Request) -> None:
         """Put a (slot-released) request at the FRONT of the queue for exact
@@ -1655,10 +1801,28 @@ def run_request_stream(engine: ContinuousBatchingEngine,
     # completion (rejected / deadline / poisoned) may never have produced a
     # first token and would poison the percentiles with NaN
     ok = [r for r in done if r.ok]
-    lat = np.asarray([r.latency for r in ok])
-    ttft = np.asarray([r.ttft for r in ok if not math.isnan(r.t_first_token)])
     n_tokens = int(sum(len(r.tokens) for r in done))
     decode_wall = max(wall - engine.t_admit, 1e-9)
+
+    def pcts(hist_name: str, values: List[float]) -> Tuple[float, float]:
+        # one source of truth with the live exposition: the engine's
+        # registry histogram (what /metrics serves) when it saw these
+        # completions; exact numpy over the request list otherwise (registry
+        # disabled). Histogram percentiles are bucket-interpolated
+        # estimates, clamped to the observed min/max and monotone in q.
+        h = engine.metrics.get(hist_name)
+        if h is not None and h.count >= len(values) > 0:
+            return h.percentile(50), h.percentile(99)
+        if not values:
+            return math.nan, math.nan
+        arr = np.asarray(values)
+        return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+    p50_lat, p99_lat = pcts("serve_request_latency_s",
+                            [r.latency for r in ok])
+    p50_ttft, p99_ttft = pcts("serve_ttft_s",
+                              [r.ttft for r in ok
+                               if not math.isnan(r.t_first_token)])
     return {
         "n_requests": len(done),
         "n_ok": len(ok),
@@ -1667,10 +1831,10 @@ def run_request_stream(engine: ContinuousBatchingEngine,
         "wall_s": wall,
         "tok_per_s": n_tokens / wall if wall > 0 else float("inf"),
         "decode_tok_per_s": n_tokens / decode_wall,
-        "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else math.nan,
-        "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else math.nan,
-        "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else math.nan,
-        "p99_ttft_s": float(np.percentile(ttft, 99)) if len(ttft) else math.nan,
+        "p50_latency_s": p50_lat,
+        "p99_latency_s": p99_lat,
+        "p50_ttft_s": p50_ttft,
+        "p99_ttft_s": p99_ttft,
         "resilience": engine.resilience.snapshot(),
     }
 

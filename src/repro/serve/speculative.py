@@ -590,10 +590,17 @@ class SlotSpecController:
     exact for EVERY per-slot window sequence (greedy output stays
     token-identical to plain decoding; sampled output keeps its
     distribution), so the controller is free to chase throughput only.
-    Host-side and O(n_slots) per round."""
+    Host-side and O(n_slots) per round.
+
+    With a serve.metrics.MetricsRegistry bound (`metrics=`), the control
+    law reports itself: per-round acceptance fractions land in the
+    `serve_spec_acceptance` histogram, and the
+    `serve_spec_ctl_disables` / `serve_spec_ctl_probes` counters track
+    slots turned off by low acceptance and idle slots re-probed."""
 
     def __init__(self, n_slots: int, spec_k: int,
-                 cfg: Optional[SpecControllerConfig] = None):
+                 cfg: Optional[SpecControllerConfig] = None, *,
+                 metrics=None):
         self.k = int(spec_k)
         self.cfg = cfg or SpecControllerConfig()
         self._a = np.ones(n_slots, np.float64)
@@ -601,6 +608,19 @@ class SlotSpecController:
         self._idle = np.zeros(n_slots, np.int64)
         self._win = np.ones(n_slots, np.int32)
         self._enabled = np.zeros(n_slots, bool)
+        if metrics is None:            # null instruments: bumps are no-ops
+            from repro.serve.metrics import MetricsRegistry
+            metrics = MetricsRegistry(enabled=False)
+        from repro.serve.metrics import RATIO_BUCKETS
+        self._h_accept = metrics.histogram(
+            "serve_spec_acceptance", RATIO_BUCKETS,
+            help="per-round accepted/drafted fraction fed to the controller")
+        self._c_disable = metrics.counter(
+            "serve_spec_ctl_disables",
+            help="slots whose EMA acceptance fell below disable_below")
+        self._c_probe = metrics.counter(
+            "serve_spec_ctl_probes",
+            help="depth-1 probe rounds granted to idle (disabled) slots")
 
     def admit(self, slot: int, enabled: bool) -> int:
         self._a[slot] = 1.0
@@ -626,6 +646,7 @@ class SlotSpecController:
             self._idle[slot] += 1
             if self._idle[slot] >= self.cfg.probe_every:
                 self._idle[slot] = 0
+                self._c_probe.inc()
                 return 2
         return int(self._win[slot])
 
@@ -636,6 +657,7 @@ class SlotSpecController:
             return int(self._win[slot])
         c = self.cfg
         frac = min(max(accepted / drafted, 0.0), 1.0)
+        self._h_accept.observe(frac)
         self._a[slot] = c.ema * self._a[slot] + (1.0 - c.ema) * frac
         self._rounds[slot] += 1
         if self._rounds[slot] < c.min_rounds:
@@ -643,6 +665,8 @@ class SlotSpecController:
         a = float(self._a[slot])
         if a < c.disable_below:
             w = 1
+            if self._win[slot] > 1:
+                self._c_disable.inc()
         elif a >= 0.999:
             w = self.k + 1
         else:

@@ -10,8 +10,11 @@ import pytest
 from benchmarks.check_regression import main as check_main
 
 
-def _doc(modes):
-    return {"serve_stream": {"modes": modes}}
+def _doc(modes, observability=None):
+    stream = {"modes": modes}
+    if observability is not None:
+        stream["observability"] = observability
+    return {"serve_stream": stream}
 
 
 def _mode(tok=1000.0, decode=None, sat=None, **extra):
@@ -22,10 +25,10 @@ def _mode(tok=1000.0, decode=None, sat=None, **extra):
     return m
 
 
-def _run(tmp_path, base, new, *args):
+def _run(tmp_path, base, new, *args, obs=None):
     bp, np_ = tmp_path / "base.json", tmp_path / "new.json"
     bp.write_text(json.dumps(_doc(base)))
-    np_.write_text(json.dumps(_doc(new)))
+    np_.write_text(json.dumps(_doc(new, observability=obs)))
     argv = sys.argv
     sys.argv = ["check_regression", "--baseline", str(bp), "--new", str(np_),
                 *args]
@@ -110,6 +113,65 @@ def test_missing_spec_mode_fails(tmp_path):
     new = {"distilled": _mode(1000, sat=2800)}
     assert _run(tmp_path, base, new) == 1
     assert _run(tmp_path, base, new, "--spec-ratio", "0") == 0
+
+
+# -- observability gate ------------------------------------------------------
+
+def _obs(off=2800.0, on=2780.0, compiles=0, **extra):
+    row = {"decode_sat_tok_per_s_off": off, "decode_sat_tok_per_s_on": on,
+           "overhead_frac": (off - on) / off if off else None,
+           "steady_state_compiles": compiles, "trace_events": 4096,
+           "trace_dropped": 0, "metric_series": 20}
+    row.update(extra)
+    return row
+
+
+_GOOD = {"distilled": _mode(1000, sat=2800),
+         "distilled_spec": _mode(1050, sat=3200)}
+
+
+def test_observability_gate_same_run(tmp_path):
+    """Telemetry overhead is gated against the SAME run's telemetry-off
+    number — within budget passes, over budget fails, knob adjusts."""
+    base = {"distilled": _mode(1000)}
+    assert _run(tmp_path, base, _GOOD, obs=_obs(on=2780.0)) == 0   # 0.7%
+    assert _run(tmp_path, base, _GOOD, obs=_obs(on=2600.0)) == 1   # 7.1%
+    assert _run(tmp_path, base, _GOOD, obs=_obs(on=2600.0),
+                *("--obs-overhead", "0.1")) == 0
+    assert _run(tmp_path, base, _GOOD, obs=_obs(on=2600.0),
+                *("--obs-overhead", "0")) == 0                     # disabled
+    # measurement noise can put "on" ahead of "off": negative overhead passes
+    assert _run(tmp_path, base, _GOOD, obs=_obs(on=2850.0)) == 0
+
+
+def test_observability_gate_compiles_and_bad_rows(tmp_path):
+    """Any steady-state compile with telemetry on fails; a malformed row
+    (missing the on/off numbers) fails rather than silently passing."""
+    base = {"distilled": _mode(1000)}
+    assert _run(tmp_path, base, _GOOD, obs=_obs(compiles=2)) == 1
+    assert _run(tmp_path, base, _GOOD,
+                obs={"steady_state_compiles": 0}) == 1
+    assert _run(tmp_path, base, _GOOD, obs=_obs(off=0.0, on=0.0)) == 1
+
+
+def test_observability_missing_row_is_tolerated(tmp_path):
+    """Bench files predating the observability row skip the gate — the
+    drop/spec gates still run (and can still fail)."""
+    base = {"distilled": _mode(1000)}
+    assert _run(tmp_path, base, _GOOD) == 0
+    bad = {"distilled": _mode(400, sat=1000),
+           "distilled_spec": _mode(420, sat=1100)}
+    assert _run(tmp_path, base, bad) == 1
+
+
+def test_observability_summary_markdown(tmp_path):
+    base = {"distilled": _mode(1000)}
+    out = tmp_path / "summary.md"
+    assert _run(tmp_path, base, _GOOD, "--summary", str(out),
+                obs=_obs(on=2780.0)) == 0
+    text = out.read_text()
+    assert "Observability overhead" in text
+    assert "2780" in text and "2800" in text
 
 
 # -- chaos gate -------------------------------------------------------------
