@@ -20,8 +20,11 @@ bench:
 # latency/TTFT percentiles, and prefill compile counts per mode, written to
 # BENCH_serve.json for cross-PR tracking. Also measures the telemetry layer
 # (tracer + metrics) on vs off in the same run — the `observability` row —
-# and writes the telemetry-on request trace to BENCH_serve_trace.json
-# (Chrome-trace JSON; load in https://ui.perfetto.dev).
+# the distilled-vs-exact drift at growing horizons (`error_vs_length`), the
+# drift sentinel's saturated-decode overhead (`sentinel`; gated <=2% with
+# zero steady-state compiles by check_regression --drift), and writes the
+# telemetry-on request trace to BENCH_serve_trace.json (Chrome-trace JSON;
+# load in https://ui.perfetto.dev).
 bench-serve:
 	$(PY) -m benchmarks.run --only serve_stream --json BENCH_serve.json
 
@@ -36,8 +39,10 @@ bench-check:
 	    --baseline /tmp/BENCH_baseline.json --new BENCH_serve.json
 
 # chaos gate: the request stream under the standard seeded fault schedule
-# (benchmarks/bench_throughput.CHAOS_SCHEDULE) per cache kind. Fails if any
-# request never reached a terminal status; recovered-fault counters
+# (benchmarks/bench_throughput.CHAOS_SCHEDULE) per cache kind, plus the
+# distilled_drift row (silent sign-flip of a slot's modal state; the drift
+# sentinel must alarm and demote the engine to the exact epoch path). Fails
+# if any request never reached a terminal status; recovered-fault counters
 # (quarantines, re-prefills, watchdog trips, ...) are report-only. Runs
 # nightly in CI.
 bench-chaos:

@@ -15,7 +15,18 @@ request stream under the standard seeded fault schedule (CHAOS_SCHEDULE) —
 state/conv/seq corruption, an injected dispatch fault, a host-loop stall and
 a forced deadline expiry. Reports completion counts and the engine's
 resilience counters; `check_regression --chaos` fails if any request never
-reached a terminal status (recovered-fault counts are report-only).
+reached a terminal status (recovered-fault counts are report-only). The
+`distilled_drift` row runs a separate schedule (DRIFT_SCHEDULE) that
+silently sign-flips one slot's modal state — invisible to the norm-margin
+health guard — and checks the online drift sentinel catches it and demotes
+the engine to the exact epoched-FFT path.
+
+Drift rows (`serve_stream.error_vs_length` + `serve_stream.sentinel`):
+teacher-forced next-token divergence of the distilled recurrence vs the
+exact epoch path at growing prompt horizons, against the static truncation
+certificate (`check_regression --drift` gates measured <= scale * bound),
+and the sentinel's saturated-decode overhead (gated <= 2%, zero steady-state
+compiles — every shadow-path executable is warmed in warmup()).
 Scaling rows (`serve_stream.scaling`): saturated-decode throughput of the
 sharded slot pool vs device count. Device counts are forced host (CPU)
 devices, so the curve verifies layout/overhead scaling (no cross-shard
@@ -173,6 +184,90 @@ def _observability_case(cfg, params):
     }
 
 
+# ---------------------------------------------------------------------------
+# Distillation error vs horizon + sentinel overhead
+# ---------------------------------------------------------------------------
+ERROR_HORIZONS = (32, 64, 128, 192)     # last == MAX_LEN
+SENTINEL_EVERY = 64                     # saturated-decode window ~= 1 check
+
+
+def _log_softmax(x):
+    x = x - x.max()
+    return x - np.log(np.exp(x).sum())
+
+
+def _error_vs_length_case(cfg, params):
+    """Teacher-forced next-token divergence (max |log-softmax| gap) of the
+    distilled recurrence vs the exact epoched-FFT path on one random prompt,
+    at growing horizons, next to the static truncation certificate. The
+    epoch path IS the exact convolution (token-identity is tested), so this
+    measures pure distillation error — the serving-level realization of the
+    paper's Fig. 4.2 error-vs-length curves.
+
+    Prefill computes the exact convolution in EVERY cache kind (that is the
+    point of prefill), so the distilled side must route its last token
+    through the recurrent decode step: native-prefill L-1 tokens, decode
+    token L-1. The exact side epoch-prefills all L tokens."""
+    from repro.core.distill import distillation_certificate
+    from repro.serve.engine import jitted_decode_step, jitted_prefill
+    rng = np.random.default_rng(0)
+    seq = rng.integers(0, cfg.vocab, size=MAX_LEN).astype(np.int32)
+    p_exact = jitted_prefill(cfg, MAX_LEN, "epoch")
+    p_dist = jitted_prefill(cfg, MAX_LEN, "native")
+    decode = jitted_decode_step(cfg)
+    pts = []
+    for L in ERROR_HORIZONS:
+        _, exact = p_exact(params, jnp.asarray(seq[None, :L]))
+        cache, _ = p_dist(params, jnp.asarray(seq[None, :L - 1]))
+        _, approx = decode(params, cache,
+                           jnp.asarray(seq[None, L - 1:L]))
+        e = _log_softmax(np.asarray(exact[0], np.float64))
+        a = _log_softmax(np.asarray(approx[0, 0], np.float64))
+        pts.append({"len": int(L),
+                    "logit_div": float(np.max(np.abs(e - a)))})
+    cert = distillation_certificate(params, cfg, MAX_LEN)
+    return {"horizons": pts,
+            "certificate_total_l1": cert["total_l1"],
+            "certificate_layers": cert["layers"],
+            "certificate_horizon": cert["horizon"]}
+
+
+def _sentinel_case(cfg, params):
+    """Saturated decode with the drift sentinel on vs off (same off/on
+    interleave-and-keep-best protocol as _observability_case). The sentinel
+    engine's shadow executables are warmed in warmup(), so the compile scope
+    around the measured window must stay at zero."""
+    from repro.serve.metrics import count_compiles
+    base = ContinuousBatchingEngine(
+        params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN, mode="distilled",
+        max_prefills_per_step=PREFILL_BATCH)
+    sent = ContinuousBatchingEngine(
+        params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN, mode="distilled",
+        max_prefills_per_step=PREFILL_BATCH,
+        drift_check_every=SENTINEL_EVERY)
+    base.warmup(PROMPT_LENS)
+    sent.warmup(PROMPT_LENS)
+    off = on = 0.0
+    compiles = 0
+    for _ in range(2):
+        off = max(off, measure_saturated_decode(
+            base, prompt_len=32)["decode_tok_per_s"])
+        with count_compiles() as scope:
+            on = max(on, measure_saturated_decode(
+                sent, prompt_len=32)["decode_tok_per_s"])
+        compiles += scope.compiles
+    h = sent.metrics.get("serve_drift_logit_div")
+    return {
+        "decode_sat_tok_per_s_off": off,
+        "decode_sat_tok_per_s_on": on,
+        "overhead_frac": (off - on) / off if off > 0 else 0.0,
+        "steady_state_compiles": compiles,
+        "drift_check_every": SENTINEL_EVERY,
+        "drift_checks": sent.resilience.get("drift_checks"),
+        "drift_max": float(h._max) if h.count else None,
+    }
+
+
 # run in a fresh interpreter per device count: the device count is fixed
 # before jax imports. Prints one "RESULT {json}" line on success.
 _SCALE_SNIPPET = """
@@ -234,6 +329,7 @@ def stream_main(out):
             ("distilled", hcfg, hparams, "distilled", 0),
             ("distilled_spec", hcfg, hparams, "distilled", SPEC_K),
             ("cached_conv", hcfg, hparams, "cached_conv", 0),
+            ("epoch", hcfg, hparams, "epoch", 0),
             ("attention_kv", tcfg, tparams, "distilled", 0)):
         m = _stream_case(cfg, params, mode, spec_k=spec)
         results["modes"][label] = m
@@ -269,6 +365,22 @@ def stream_main(out):
             f"compiles_in_run={obs['steady_state_compiles']} "
             f"trace_events={obs['trace_events']} "
             f"metric_series={obs['metric_series']}"))
+    # distillation error vs horizon against the static certificate (the
+    # check_regression --drift gate) + the sentinel's overhead gate
+    evl = _error_vs_length_case(hcfg, hparams)
+    results["error_vs_length"] = evl
+    out(row("serve_stream/error_vs_length", 0.0,
+            " ".join(f"L{p['len']}={p['logit_div']:.3e}"
+                     for p in evl["horizons"])
+            + f" cert_l1={evl['certificate_total_l1']:.3e}"))
+    sent = _sentinel_case(hcfg, hparams)
+    results["sentinel"] = sent
+    out(row("serve_stream/sentinel", 0.0,
+            f"sat_decode_tok_s_on={sent['decode_sat_tok_per_s_on']:.0f} "
+            f"off={sent['decode_sat_tok_per_s_off']:.0f} "
+            f"overhead={sent['overhead_frac'] * 100:+.2f}% "
+            f"checks={sent['drift_checks']} "
+            f"compiles_in_run={sent['steady_state_compiles']}"))
     # tok/s-vs-devices scaling of the sharded slot pool (fresh interpreter
     # per device count — see _SCALE_SNIPPET)
     scaling = [_scale_case(d) for d in SCALE_DEVICES]
@@ -308,6 +420,26 @@ CHAOS_SCHEDULE = {
 CHAOS_WATCHDOG_S = 0.02
 CHAOS_SPEC_K = 4        # fixed config: the autotune sweep is not under test
 
+# Silent-drift schedule for the sentinel demotion row: value=-2.0 scales the
+# modal state by (1 + eps) = -1 — a pure sign flip. The norm-margin health
+# guard cannot see it (norms are unchanged) but the decoded distribution is
+# garbage, which is exactly the failure class the shadow-verify sentinel
+# exists for. The row runs on `sentinel_cfg()` (near-exact distillation):
+# the sentinel can only flag drift larger than the genuine distillation
+# error, so the tolerance must sit between the clean shadow divergence
+# (~1e-2 on that model) and the flipped-state divergence (~2+); the
+# bench-size model's loose certificate (serve_stream.error_vs_length)
+# leaves no such gap.
+DRIFT_SCHEDULE = {
+    "seed": 0,
+    "events": [{"tick": 8, "kind": "drift", "value": -2.0}],
+}
+DRIFT_CHECK_EVERY = 4
+DRIFT_TOL = 0.5
+DRIFT_MAX_LEN = 48
+DRIFT_PROMPT_LENS = (8, 16)
+DRIFT_GEN_TOKENS = (8, 12)
+
 
 CHAOS_TRACE_OUT = "BENCH_chaos_trace.json"  # uploaded by the nightly job
 
@@ -343,6 +475,46 @@ def _chaos_case(cfg, params, mode, spec_k=0, tracer=None):
     }
 
 
+def _drift_chaos_case():
+    """Distilled engine + silent state drift: the sentinel must raise the
+    alarm and demote the engine to the exact epoch path, with every request
+    still reaching a terminal status. Runs on the sentinel-calibrated small
+    model (see DRIFT_SCHEDULE comment)."""
+    from benchmarks.models import sentinel_cfg
+    from repro.serve.faults import FaultInjector
+    cfg = sentinel_cfg()
+    params = build(cfg, distill=True, distill_len=DRIFT_MAX_LEN)
+    inj = FaultInjector(DRIFT_SCHEDULE["events"], seed=DRIFT_SCHEDULE["seed"])
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=N_SLOTS,
+                                   max_len=DRIFT_MAX_LEN, mode="distilled",
+                                   max_prefills_per_step=PREFILL_BATCH,
+                                   fault_injector=inj,
+                                   drift_check_every=DRIFT_CHECK_EVERY,
+                                   drift_tol=DRIFT_TOL)
+    eng.warmup(DRIFT_PROMPT_LENS)
+    stream = synthesize_request_stream(
+        np.random.default_rng(0), N_REQ, rate=RATE,
+        prompt_lens=DRIFT_PROMPT_LENS,
+        gen_tokens=DRIFT_GEN_TOKENS, vocab=cfg.vocab)
+    m = run_request_stream(eng, stream)
+    h = eng.metrics.get("serve_drift_logit_div")
+    return {
+        "n_requests_expected": N_REQ,
+        "n_completed": int(m["n_requests"]),
+        "n_ok": int(m["n_ok"]),
+        "n_errors": int(m["n_errors"]),
+        "unrecovered": N_REQ - int(m["n_requests"]),
+        "wall_s": m["wall_s"],
+        "faults_fired": len(inj.log),
+        "drift_checks": int(m["resilience"].get("drift_checks", 0)),
+        "drift_alarms": int(m["resilience"].get("drift_alarms", 0)),
+        "drift_max": float(h._max) if h.count else None,
+        "drift_tol": DRIFT_TOL,
+        "final_mode": eng.mode,
+        "resilience": m["resilience"],
+    }
+
+
 def chaos_main(out):
     hcfg = hyena_cfg()
     hparams = build(hcfg, distill=True)
@@ -374,4 +546,13 @@ def chaos_main(out):
                 f"faults_absorbed={m['total_faults']} "
                 f"reprefills={m['resilience']['slot_reprefills']} "
                 f"poisoned={m['resilience']['poisoned']}"))
+    # silent-drift row: sentinel detection + demotion to the exact path
+    m = _drift_chaos_case()
+    results["modes"]["distilled_drift"] = m
+    out(row("serve_chaos/distilled_drift", m["wall_s"] * 1e6,
+            f"completed={m['n_completed']}/{m['n_requests_expected']} "
+            f"unrecovered={m['unrecovered']} "
+            f"drift_alarms={m['drift_alarms']}/{m['drift_checks']}checks "
+            f"drift_max={m['drift_max'] if m['drift_max'] is not None else float('nan'):.3g} "
+            f"final_mode={m['final_mode']}"))
     return {"serve_chaos": results}

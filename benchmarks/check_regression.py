@@ -39,6 +39,18 @@ vs fully off in the same run; the on side must stay within `--obs-overhead`
 ratio, so it is machine-independent like the spec gate; bench files
 predating the row are skipped, not failed.
 
+Drift gate (`--drift`): the `serve_stream.error_vs_length` row measures the
+distilled path's teacher-forced next-token divergence from the exact
+epoched-FFT path at growing horizons; every measured point must stay within
+`--drift-scale` (default 1.0) times the static truncation certificate
+(`distillation_certificate` total l1 — the bound is an upper bound, so
+scale 1.0 just asserts the certificate holds at the logits). The
+`serve_stream.sentinel` row must keep the drift sentinel's saturated-decode
+overhead within `--obs-overhead` with zero steady-state compiles. The chaos
+`distilled_drift` row must show at least one sentinel alarm and a final
+mode of `epoch` (detection + demotion actually happened). Files predating
+the rows are skipped unless `--drift` was passed explicitly.
+
 A markdown comparison table (old -> new tok/s per mode, acceptance, tokens
 per round) is appended to `--summary` when given, else to the file named by
 $GITHUB_STEP_SUMMARY when set — so spec perf is visible on every PR's
@@ -185,6 +197,108 @@ def _observability_table(obs: Dict[str, Any]) -> List[str]:
             f"| {_fmt(_num(obs, 'metric_series'), '.0f')} |"]
 
 
+def _drift_rows(doc) -> Dict[str, Dict[str, Any]]:
+    """error_vs_length + sentinel rows; empty for files predating them."""
+    ss = doc.get("serve_stream", {})
+    out = {}
+    for k in ("error_vs_length", "sentinel"):
+        v = ss.get(k, {})
+        if isinstance(v, dict) and v:
+            out[k] = v
+    return out
+
+
+def _check_drift(rows: Dict[str, Dict[str, Any]], scale: float,
+                 max_overhead: float, required: bool,
+                 failures: List[str]) -> None:
+    """Gate measured distillation drift against the static certificate and
+    the sentinel's overhead. The certificate upper-bounds the filter-output
+    error; `scale` leaves headroom for the (mild) nonlinear amplification
+    through the rest of the block before it reaches the logits."""
+    evl = rows.get("error_vs_length")
+    if not evl:
+        if required:
+            failures.append("--drift: serve_stream.error_vs_length row "
+                            "missing from the new run")
+        else:
+            print("[bench-check] drift: no error_vs_length row "
+                  "(pre-sentinel bench file) — skipping")
+        return
+    bound = _num(evl, "certificate_total_l1")
+    if bound is None or bound <= 0:
+        failures.append("drift: certificate_total_l1 missing from the "
+                        "error_vs_length row")
+        return
+    cap = scale * bound
+    for p in evl.get("horizons", []):
+        div = _num(p, "logit_div")
+        ln = int(p.get("len", 0))
+        if div is None:
+            failures.append(f"drift: horizon {ln} has no logit_div")
+            continue
+        status = "ok" if div <= cap else "OVER CERTIFICATE"
+        print(f"[bench-check] drift L={ln:<4d} logit_div {div:.3e} vs "
+              f"{scale:.2f}x certificate ({cap:.3e}) {status}")
+        if div > cap:
+            failures.append(
+                f"drift: horizon {ln} divergence {div:.3e} exceeds "
+                f"{scale:.2f}x the static certificate bound {bound:.3e}")
+    sent = rows.get("sentinel")
+    if not sent:
+        if required:
+            failures.append("--drift: serve_stream.sentinel row missing "
+                            "from the new run")
+        return
+    off = _num(sent, "decode_sat_tok_per_s_off")
+    on = _num(sent, "decode_sat_tok_per_s_on")
+    if off is None or on is None or off <= 0:
+        failures.append("drift: sentinel on/off saturated decode tok/s "
+                        "missing")
+    else:
+        overhead = (off - on) / off
+        status = "ok" if overhead <= max_overhead else "TOO SLOW"
+        print(f"[bench-check] drift sentinel-on {on:.1f} vs off {off:.1f} "
+              f"tok/s ({overhead:+.2%} overhead, max {max_overhead:.0%}) "
+              f"{status}")
+        if overhead > max_overhead:
+            failures.append(
+                f"drift: sentinel costs {overhead:.2%} of saturated decode "
+                f"({off:.1f} -> {on:.1f} tok/s), over the "
+                f"{max_overhead:.0%} budget")
+    compiles = _num(sent, "steady_state_compiles")
+    if compiles is None or compiles != 0:
+        failures.append(f"drift: {compiles} steady-state compiles with the "
+                        f"sentinel armed (every shadow executable must be "
+                        f"warmed in warmup())")
+
+
+def _drift_table(rows: Dict[str, Dict[str, Any]]) -> List[str]:
+    evl = rows.get("error_vs_length")
+    if not evl:
+        return []
+    bound = _num(evl, "certificate_total_l1")
+    lines = ["", "### Distillation drift vs exact epoch path", "",
+             "| horizon | logit divergence | certificate l1 |",
+             "|---|---|---|"]
+    for p in evl.get("horizons", []):
+        lines.append(f"| {int(p.get('len', 0))} "
+                     f"| {_fmt(_num(p, 'logit_div'), '.3e')} "
+                     f"| {_fmt(bound, '.3e')} |")
+    sent = rows.get("sentinel")
+    if sent:
+        off = _num(sent, "decode_sat_tok_per_s_off")
+        on = _num(sent, "decode_sat_tok_per_s_on")
+        ovh = ((off - on) / off if off and on is not None else None)
+        lines += ["",
+                  f"sentinel: every {_fmt(_num(sent, 'drift_check_every'), '.0f')} "
+                  f"ticks, overhead "
+                  f"{_fmt(None if ovh is None else 100 * ovh, '+.2f')}%, "
+                  f"{_fmt(_num(sent, 'steady_state_compiles'), '.0f')} "
+                  f"steady-state compiles, max shadow divergence "
+                  f"{_fmt(_num(sent, 'drift_max'), '.3e')}"]
+    return lines
+
+
 def _num(m: Dict[str, Any], key: str) -> Optional[float]:
     """Metric as float; tolerates old files with int/float drift or the key
     missing entirely."""
@@ -282,6 +396,19 @@ def _check_chaos(chaos: Dict[str, Dict[str, Any]],
             failures.append(
                 f"chaos {mode}: {unrec} request(s) never reached a terminal "
                 f"status under the fault schedule")
+        if mode == "distilled_drift":
+            alarms = int(m.get("drift_alarms", 0))
+            final = m.get("final_mode")
+            print(f"[bench-check] chaos {mode:15s} drift_alarms={alarms} "
+                  f"final_mode={final}")
+            if alarms < 1:
+                failures.append(
+                    "chaos distilled_drift: the sentinel never alarmed on "
+                    "the sign-flipped slot state")
+            if final != "epoch":
+                failures.append(
+                    f"chaos distilled_drift: engine ended in mode "
+                    f"{final!r}, expected demotion to 'epoch'")
 
 
 def _write_summary(lines: List[str], path: Optional[str]) -> None:
@@ -316,6 +443,13 @@ def main() -> int:
                          "telemetry (tracing + metrics) enabled, same-run "
                          "on-vs-off ratio (0 disables; files without the "
                          "observability row are skipped, not failed)")
+    ap.add_argument("--drift", action="store_true",
+                    help="require the drift rows (error_vs_length + "
+                         "sentinel): fail when missing instead of skipping")
+    ap.add_argument("--drift-scale", type=float, default=1.0,
+                    help="max tolerated measured logit divergence as a "
+                         "multiple of the static truncation certificate "
+                         "(0 disables the drift gate)")
     ap.add_argument("--summary", type=str, default=None,
                     help="append the markdown comparison table to this file "
                          "(default: $GITHUB_STEP_SUMMARY when set)")
@@ -387,8 +521,14 @@ def main() -> int:
     if args.baseline and args.obs_overhead > 0:
         _check_observability(new_obs, args.obs_overhead, failures)
 
+    drift_rows = _drift_rows(new_doc) if args.baseline else {}
+    if args.baseline and args.drift_scale > 0:
+        _check_drift(drift_rows, args.drift_scale, args.obs_overhead,
+                     args.drift, failures)
+
     lines = _summary_table(base, new) if args.baseline else []
     lines += _observability_table(new_obs)
+    lines += _drift_table(drift_rows)
     lines += _scaling_table(base_scaling, new_scaling)
     if args.chaos:
         with open(args.chaos) as f:

@@ -33,6 +33,24 @@ def hyena_cfg(distill_order: int = 16) -> ModelConfig:
                        max_seq=65536, dtype="float32")
 
 
+def sentinel_cfg() -> ModelConfig:
+    """Small config whose distillation is near-exact (distill_order high
+    relative to the serving horizon), for the drift-sentinel chaos row.
+
+    The sentinel can only flag drift LARGER than the genuine distillation
+    error — that floor is exactly what the static certificate reports. The
+    bench-size model above distills with a loose certificate (l1 ~ 4), so a
+    deterministic detection demo needs a tight one: this config's clean
+    shadow divergence is ~1e-2 against ~2+ for a sign-flipped state."""
+    return ModelConfig(name="bench-sentinel", family="lcsm", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=64, vocab=64, act="gelu", norm="layernorm",
+                       pattern=(HYENA,),
+                       hyena=HyenaConfig(n_filter_heads=2, filter_order=16,
+                                         filter_emb=9, distill_order=32),
+                       max_seq=512, dtype="float32")
+
+
 def build(cfg, key=0, distill: bool = False, distill_len: int = 1024):
     params, _ = unzip(init_params(jax.random.PRNGKey(key), cfg))
     if distill:

@@ -206,3 +206,48 @@ def distill_model(params, cfg, *, d: Optional[int] = None, steps: int = 3000,
         new_params["groups"][f"l{i}"]["mix"]["distilled"] = dp
         errs[f"l{i}"] = err
     return new_params, errs
+
+
+def distillation_certificate(params, cfg, L: Optional[int] = None) -> Dict:
+    """Measured per-layer distillation-error certificate for a distilled
+    model: materialize every Hyena layer's TRUE filters and the distilled
+    modal reconstruction at horizon L and record the worst-case gap.
+
+    Per layer, ``l1`` = sum over positions of the max-over-filter error —
+    the error any single conv output can accumulate over an L-token
+    generation through that layer; ``max_abs`` is the worst single
+    position. ``total_l1`` sums the layers and is what the serving drift
+    gate (benchmarks/check_regression.py --drift) scales into a bound on
+    steady-state logits divergence. The stored distilled passthrough
+    absorbed the explicit bias (h0_total = h[0] + bias), so the bias is
+    subtracted back out before comparing against the raw filters. Returns
+    plain floats (JSON-ready).
+    """
+    from repro.models.hyena import materialize_filters
+    from repro.configs.base import HYENA
+
+    hcfg = cfg.hyena
+    L = L or min(cfg.max_seq, 8192)
+    layers: Dict[str, Dict[str, float]] = {}
+    total = 0.0
+
+    def entry_err(block_params):
+        h, bias = materialize_filters(block_params["filter"], L, hcfg)
+        dp = block_params["distilled"]
+        ssm = ModalSSM(dp["log_a"], dp["theta"], dp["R_re"], dp["R_im"],
+                       dp["h0"] - bias)
+        return jnp.abs(eval_filter(ssm, L) - h)
+
+    for i, kind in enumerate(cfg.pattern):
+        if kind != HYENA:
+            continue
+        gp = params["groups"][f"l{i}"]["mix"]
+        if "distilled" not in gp:
+            raise ValueError("distillation_certificate requires distilled "
+                             "params (run distill_model first)")
+        err = jax.vmap(entry_err)(gp)               # (G, filters..., L)
+        per_pos = jnp.max(err.reshape(-1, L), axis=0)
+        l1 = float(jnp.sum(per_pos))
+        layers[f"l{i}"] = {"max_abs": float(jnp.max(err)), "l1": l1}
+        total += l1
+    return {"layers": layers, "total_l1": total, "horizon": int(L)}

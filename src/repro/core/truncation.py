@@ -73,3 +73,35 @@ def modal_truncation(ssm: ModalSSM, n: int, refit: bool = False,
     if return_indices:
         return out, idx
     return out
+
+
+def truncation_error_certificate(ssm: ModalSSM, n: int, L: int):
+    """Static per-position error certificate for `modal_truncation`
+    (refit=False): with the kept modes' poles AND residues untouched, the
+    filter gap is exactly the discarded modes' sum, so by the triangle
+    inequality
+
+        |h_full[t] - h_trunc[t]| <= sum_d |R_d| |lam_d|^(t-1)   (t >= 1)
+
+    over the discarded set d (position 0 is exact — h0 is kept). This is a
+    provable upper bound, not an estimate; a refit re-solves the kept
+    residues and voids it. Returns
+      * "curve"    (..., L)  per-position bound above;
+      * "l1_bound" (...,)    sum_d |R_d| / (1 - |lam_d|) — the infinite-
+        horizon l1 norm of the discard (inf for unstable discarded poles),
+        which dominates sum_t curve[t] at every horizon;
+      * "dropped"  (..., max(d-n, 0)) indices of the discarded modes
+        (same h-inf influence ranking as `modal_truncation`).
+    """
+    a = jnp.exp(ssm.log_a)
+    infl = jnp.abs(ssm.residues()) / jnp.clip(jnp.abs(1.0 - a), 1e-6)
+    idx = jnp.argsort(-infl, axis=-1)[..., n:]
+    take = lambda arr: jnp.take_along_axis(arr, idx, axis=-1)
+    absR = jnp.abs(take(ssm.R_re) + 1j * take(ssm.R_im))
+    mag = take(a)
+    t = jnp.arange(L - 1, dtype=jnp.float32)
+    tail = jnp.einsum("...d,...dl->...l", absR, mag[..., None] ** t)
+    curve = jnp.concatenate([jnp.zeros_like(tail[..., :1]), tail], axis=-1)
+    l1 = jnp.sum(jnp.where(mag < 1.0, absR / jnp.clip(1.0 - mag, 1e-9),
+                           jnp.inf), axis=-1)
+    return {"curve": curve, "l1_bound": l1, "dropped": idx}

@@ -11,7 +11,12 @@ continuous batching; reports tokens/s and p50/p99 latency):
 
   PYTHONPATH=src python -m repro.launch.serve --arch multihyena-153m --smoke \
       --distill --stream --n-requests 16 --rate 20 --slots 4 \
-      --mode distilled            # or cached_conv
+      --mode distilled            # or cached_conv / epoch (exact FFT path)
+
+The distilled path can be guarded by the online drift sentinel
+(--drift-check-every N [--drift-tol T]): every N ticks one resident slot's
+next token is re-derived through the exact epoched-FFT path and compared;
+divergence beyond the tolerance demotes the engine to the epoch mode.
 
 Serving fast path (all on by default in --stream mode): prompt-length
 bucketing (one batched prefill executable per power-of-two bucket), the
@@ -71,7 +76,7 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--mode", choices=("distilled", "cached_conv"),
+    ap.add_argument("--mode", choices=("distilled", "cached_conv", "epoch"),
                     default="distilled")
     # request-stream serving
     ap.add_argument("--stream", action="store_true",
@@ -123,6 +128,15 @@ def main():
                          "a seeded serve/faults.FaultInjector: corrupt slot "
                          "state, raise in dispatch, stall the loop, expire "
                          "deadlines")
+    ap.add_argument("--drift-check-every", type=int, default=0,
+                    help="distillation-drift sentinel: every N ticks, "
+                         "re-decode one resident slot's next token through "
+                         "the exact epoched-FFT path and record the "
+                         "log-softmax divergence vs the distilled engine "
+                         "(0 disables; distilled mode only)")
+    ap.add_argument("--drift-tol", type=float, default=None,
+                    help="sentinel alarm threshold: divergence above this "
+                         "demotes the engine to the exact epoch path")
     ap.add_argument("--restore", type=str, default=None,
                     help="resume from an engine checkpoint written by "
                          "serve.checkpoint.save_engine (bit-exact for "
@@ -210,7 +224,9 @@ def _serve_stream(params, cfg, args):
                                    max_queue=args.max_queue,
                                    fault_injector=injector,
                                    tracer=tracer,
-                                   events_limit=args.events_limit or None)
+                                   events_limit=args.events_limit or None,
+                                   drift_check_every=args.drift_check_every,
+                                   drift_tol=args.drift_tol)
     server = None
     if args.metrics_port is not None:
         from repro.serve.metrics import start_metrics_server
@@ -265,6 +281,16 @@ def _serve_stream(params, cfg, args):
               f"{tpr if tpr is not None else float('nan'):.2f} "
               f"(draft order {eng.draft_order}, K={eng._spec_k}, "
               f"branch={eng._spec_branch})")
+    if eng.resilience.get("drift_checks"):
+        h = eng.metrics.get("serve_drift_logit_div")
+        print(f"[serve] drift sentinel: "
+              f"{eng.resilience.get('drift_checks')} checks, "
+              f"{eng.resilience.get('drift_alarms')} alarms, "
+              f"last divergence "
+              f"{eng._drift_last if eng._drift_last is not None else float('nan'):.3e} "
+              f"(max {h._max:.3e}, tol "
+              f"{args.drift_tol if args.drift_tol is not None else 'off'}), "
+              f"final mode {eng.mode}")
     print(f"[serve] scheduler stats: {eng.stats}")
     print(f"[serve] prefill compile stats: {eng.prefill_compile_stats()}")
     res = {k: v for k, v in m["resilience"].items() if v}

@@ -200,7 +200,9 @@ def hyena_block(params, x, cfg, *, ctx: ShardCtx = NOCTX,
     cache_kind selects what `return_cache` collects:
       * "native" — distilled modal SSM state (O(d) recurrent decode);
       * "conv"   — the k.v product sequence for the Lemma-2.1 cached-conv
-                   decode baseline (O(t) per token).
+                   decode baseline (O(t) per token);
+      * "epoch"  — the conv buffers plus the FutureFill epoch state
+                   (exact decode at amortized O(sqrt(L) log L) per token).
 
     `lengths` (B,) marks per-row true prompt lengths for bucketed (right-
     padded) prefill: the collected caches are masked/gathered so padded
@@ -244,6 +246,13 @@ def hyena_block(params, x, cfg, *, ctx: ShardCtx = NOCTX,
                 jnp.arange(S)[None, :, None] < lengths[:, None, None], kv, 0)
         if cache_kind == "conv":
             cache = {"conv": conv, "kv": kv_c.astype(jnp.float32)}
+        elif cache_kind == "epoch":
+            # FutureFill epoch cache: prefill leaves epoch 0 with `fut`
+            # empty — the first decode tick's flush bakes the whole prefix
+            # in via one FFT (exact either way; see hyena_decode_epoch).
+            cache = {"conv": conv, "kv": kv_c.astype(jnp.float32),
+                     "fut": jnp.zeros((B, S, D), jnp.float32),
+                     "epoch": jnp.zeros((B,), jnp.int32)}
         else:
             # modal SSM prefill (Sec. 3.4, O(dT) matmul variant — MXU friendly)
             xr, xi = modal_prefill_state(params["distilled"], kv_c, cfg.hyena,
@@ -384,6 +393,88 @@ def hyena_decode_cached_conv(params, cache, x, pos, cfg, filters,
 
 
 # ---------------------------------------------------------------------------
+# Decode: epoched convolution (FutureFill / Flash Inference) — exact output
+# from the TRUE long filter at amortized O(sqrt(L) log L) per token
+# ---------------------------------------------------------------------------
+def epoch_tail(max_len: int) -> int:
+    """Online-tail length E for the epoched decode: the smallest power of two
+    >= sqrt(max_len), clamped to max_len. A flush re-runs the full FFT every
+    ~E tokens per slot, so the per-token amortized cost is
+    O(E + (L/E) log L) ~ O(sqrt(L) log L) — the FutureFill schedule."""
+    target = max(1, math.isqrt(max(max_len - 1, 0)) + 1)
+    return min(1 << (target - 1).bit_length(), max_len)
+
+
+def init_hyena_epoch_cache(batch: int, max_len: int, cfg, dtype=jnp.float32):
+    """Epoch cache = the cached-conv buffers plus the FutureFill state:
+    `fut` (B, max_len, D) holds the consumed prefix's precomputed
+    contribution to every future output position, `epoch` (B,) int32 the
+    per-slot count of prefix tokens baked into it."""
+    c = init_hyena_conv_cache(batch, max_len, cfg, dtype)
+    c["fut"] = jnp.zeros((batch, max_len, cfg.d_model), dtype)
+    c["epoch"] = jnp.zeros((batch,), jnp.int32)
+    return c
+
+
+def hyena_decode_epoch(params, cache, x, pos, cfg, filters,
+                       *, ctx: ShardCtx = NOCTX):
+    """One-token epoched decode (FutureFill): y_t exact from the true long
+    filter, amortized O(sqrt(L) log L) per token.
+
+    The causal conv splits at the per-slot epoch boundary e:
+    fut[t] = sum_{j<e} h[t-j] (kv)_j is precomputed for EVERY future t by one
+    FFT at the last flush, so the step only adds the short online tail
+    sum_{j in [e, t]} h[t-j] (kv)_j — at most E = epoch_tail terms. When the
+    tail would exceed E the flush re-runs the FFT over the kv buffer (rows
+    past t are zero, so the full causal conv IS the prefix contribution to
+    every future position) under a lax.cond: one executable, zero
+    steady-state compiles, FFT cost amortized over ~E tokens per slot.
+    Prefill leaves epoch 0 with fut empty, so a freshly admitted slot's
+    first decode tick bakes the whole prompt in — exact either way.
+    pos: scalar int32 or per-slot (B,).
+    """
+    B, _, D = x.shape
+    h_full, h0 = filters                                   # (M, Lmax), (M,)
+    M = h_full.shape[0]
+    Lmax = cache["kv"].shape[1]
+    E = epoch_tail(Lmax)
+    qkv = jnp.einsum("bsd,dge->bsge", x,
+                     params["wqkv"].astype(x.dtype)).reshape(B, 3 * D)
+    conv_cache, qkv = short_conv_step(params["short_conv"], cache["conv"], qkv)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    kv_t = (k * v).astype(cache["kv"].dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos, jnp.int32)
+    widx = jnp.minimum(pos, Lmax - 1)                      # clamp idle slots
+    kv_cache = cache["kv"].at[jnp.arange(B), widx].set(kv_t)
+    epoch = jnp.asarray(cache["epoch"], jnp.int32)
+    flush = (pos + 1 - epoch) > E                          # tail incl. token t
+
+    def do_flush(fut):
+        full = fft_conv(kv_cache, h_full).astype(fut.dtype)
+        return jnp.where(flush[:, None, None], full, fut)
+
+    fut = jax.lax.cond(jnp.any(flush), do_flush, lambda f: f, cache["fut"])
+    new_epoch = jnp.where(flush, pos + 1, epoch)
+    # online tail over [epoch', pos]: <= E terms, empty right after a flush
+    idx = pos[:, None] - jnp.arange(E)[None, :]            # (B, E)
+    keep = (idx >= new_epoch[:, None]) & (idx >= 0)
+    kv_g = jnp.take_along_axis(kv_cache, jnp.clip(idx, 0)[..., None], axis=1)
+    h_tail = jnp.repeat(h_full[:, :E], D // M, axis=0)     # (D, E)
+    y = jnp.einsum("bkd,dk->bd", jnp.where(keep[..., None], kv_g, 0),
+                   h_tail.astype(kv_cache.dtype))
+    fut_t = jnp.take_along_axis(fut, widx[:, None, None], axis=1)[:, 0, :]
+    y = y.astype(jnp.float32) + fut_t.astype(jnp.float32) + \
+        jnp.repeat(h0, D // M) * kv_t.astype(jnp.float32)
+    out = (q.astype(jnp.float32) * y).astype(x.dtype)
+    new_cache = {"conv": conv_cache, "kv": kv_cache, "fut": fut,
+                 "epoch": new_epoch}
+    return new_cache, jnp.einsum("be,ed->bd", out,
+                                 params["wo"].astype(x.dtype))[:, None, :]
+
+
+# ---------------------------------------------------------------------------
 # Multi-token decode on the decode cache (speculative verify / replay)
 # ---------------------------------------------------------------------------
 def _short_conv_rows(params, tail, u, active_len):
@@ -517,6 +608,85 @@ def hyena_decode_cached_conv_chunk(params, cache, x, pos, active_len, cfg,
     y = y.astype(jnp.float32) + jnp.repeat(h0, D // M) * kvc.astype(jnp.float32)
     out = (q.astype(jnp.float32) * y).astype(x.dtype)
     new_cache = {"conv": new_tail, "kv": kv_cache}
+    return new_cache, jnp.einsum("bse,ed->bsd", out,
+                                 params["wo"].astype(x.dtype))
+
+
+def hyena_decode_epoch_chunk(params, cache, x, pos, active_len, cfg,
+                             filters, *, ctx: ShardCtx = NOCTX):
+    """Epoched multi-token decode (speculative verify / replay): write up to
+    C new k.v products per slot and emit the exact causal conv at every chunk
+    position as fut[t] + an online tail of at most E + C terms — the at-rest
+    tail is <= E by the flush invariant and the chunk adds <= C, so a widened
+    static window covers every mid-chunk position without flushing.
+
+    Two lax.cond flushes bracket the chunk: an ENTRY flush for slots whose
+    at-rest tail exceeds E (a freshly admitted slot arrives with epoch 0 —
+    prefill defers its flush to the first decode; the entry kv rows past pos
+    are zero, so the full causal FFT is the prefix contribution), and an END
+    flush restoring the <= E invariant for the next tick. `fut`/`epoch` are
+    rewritten wholesale by flushes, which is why they are deliberately NOT
+    in model._SEQ_KEYS: a speculative snapshot/rollback restores them whole
+    while `kv` rolls back row-indexed."""
+    B, C, D = x.shape
+    h_full, h0 = filters                                  # (M, Lmax), (M,)
+    M = h_full.shape[0]
+    Lmax = cache["kv"].shape[1]
+    E = epoch_tail(Lmax)
+    W = min(E + C, Lmax)
+    qkv = jnp.einsum("bsd,dge->bsge", x,
+                     params["wqkv"].astype(x.dtype)).reshape(B, C, 3 * D)
+    pos = jnp.asarray(pos, jnp.int32)
+    active_len = jnp.asarray(active_len, jnp.int32)
+    new_tail, qkv, _ = _short_conv_rows(params["short_conv"],
+                                        cache["conv"], qkv, active_len)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    kvc = (k * v).astype(cache["kv"].dtype)               # (B, C, D)
+    epoch = jnp.asarray(cache["epoch"], jnp.int32)
+    entry = (pos - epoch) > E
+
+    def do_entry(fut):
+        full = fft_conv(cache["kv"], h_full).astype(fut.dtype)
+        return jnp.where(entry[:, None, None], full, fut)
+
+    fut = jax.lax.cond(jnp.any(entry), do_entry, lambda f: f, cache["fut"])
+    epoch = jnp.where(entry, pos, epoch)
+    positions = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    widx = jnp.clip(positions, 0, Lmax - 1)
+    valid = jnp.arange(C)[None, :] < active_len[:, None]
+    b = jnp.arange(B)[:, None]
+    cur = jnp.take_along_axis(cache["kv"],
+                              jnp.broadcast_to(widx[..., None], (B, C, D)),
+                              axis=1)
+    kv_cache = cache["kv"].at[b, widx].set(
+        jnp.where(valid[..., None], kvc, cur))
+    # per-position online tail over [epoch, pos_b + c]: <= E + C terms
+    idx = positions[:, :, None] - jnp.arange(W)[None, None, :]   # (B, C, W)
+    keep = (idx >= epoch[:, None, None]) & (idx >= 0)
+    kv_g = jnp.take_along_axis(
+        kv_cache, jnp.clip(idx, 0).reshape(B, C * W)[..., None],
+        axis=1).reshape(B, C, W, D)
+    h_tail = jnp.repeat(h_full[:, :W], D // M, axis=0)           # (D, W)
+    y = jnp.einsum("bckd,dk->bcd", jnp.where(keep[..., None], kv_g, 0),
+                   h_tail.astype(kv_cache.dtype))
+    fut_c = jnp.take_along_axis(fut,
+                                jnp.broadcast_to(widx[..., None], (B, C, D)),
+                                axis=1)
+    y = y.astype(jnp.float32) + fut_c.astype(jnp.float32) + \
+        jnp.repeat(h0, D // M) * kvc.astype(jnp.float32)
+    out = (q.astype(jnp.float32) * y).astype(x.dtype)
+    # end-of-chunk flush keeps the at-rest tail <= E for the next tick
+    new_pos = pos + active_len
+    flush = (new_pos - epoch) > E
+
+    def do_flush(fut):
+        full = fft_conv(kv_cache, h_full).astype(fut.dtype)
+        return jnp.where(flush[:, None, None], full, fut)
+
+    fut = jax.lax.cond(jnp.any(flush), do_flush, lambda f: f, fut)
+    new_epoch = jnp.where(flush, new_pos, epoch)
+    new_cache = {"conv": new_tail, "kv": kv_cache, "fut": fut,
+                 "epoch": new_epoch}
     return new_cache, jnp.einsum("bse,ed->bsd", out,
                                  params["wo"].astype(x.dtype))
 

@@ -327,6 +327,12 @@ def _init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
         hc = hyena_mod.init_hyena_conv_cache(batch, max_len, cfg)
         c["conv"] = Param(hc["conv"], ("batch", None, "qkv"))
         c["kv"] = Param(hc["kv"], ("batch", "kv_seq", "qkv"))
+    elif kind == HYENA and cache_kind == "epoch":
+        hc = hyena_mod.init_hyena_epoch_cache(batch, max_len, cfg)
+        c["conv"] = Param(hc["conv"], ("batch", None, "qkv"))
+        c["kv"] = Param(hc["kv"], ("batch", "kv_seq", "qkv"))
+        c["fut"] = Param(hc["fut"], ("batch", "kv_seq", "qkv"))
+        c["epoch"] = Param(hc["epoch"], ("batch",))
     elif kind == HYENA:
         hc = hyena_mod.init_hyena_cache(batch, cfg)
         c["conv"] = Param(hc["conv"], ("batch", None, "qkv"))
@@ -389,7 +395,14 @@ def _decode_block(bp, bc, kind: str, x, pos, cfg: ModelConfig, ctx: ShardCtx,
                                           window=window, ctx=ctx)
         bc = dict(bc, **kv)
     elif kind == HYENA:
-        if "kv" in bc:            # Lemma-2.1 cached-conv baseline (O(t)/token)
+        if "fut" in bc:           # FutureFill epoched exact decode
+            sub = {k: bc[k] for k in ("conv", "kv", "fut", "epoch")}
+            if conv_filters is None:   # fallback: re-materialize every step
+                conv_filters = hyena_mod.materialize_filters(
+                    bp["mix"]["filter"], bc["kv"].shape[1], cfg.hyena)
+            sub, y = hyena_mod.hyena_decode_epoch(
+                bp["mix"], sub, h, pos, cfg, conv_filters, ctx=ctx)
+        elif "kv" in bc:          # Lemma-2.1 cached-conv baseline (O(t)/token)
             sub = {k: bc[k] for k in ("conv", "kv")}
             if conv_filters is None:   # fallback: re-materialize every step
                 conv_filters = hyena_mod.materialize_filters(
@@ -507,7 +520,15 @@ def _decode_chunk_block(bp, bc, kind: str, x, pos, active_len,
                                                 window=window, ctx=ctx)
         bc = dict(bc, **kv)
     elif kind == HYENA:
-        if "kv" in bc:            # Lemma-2.1 cached-conv baseline
+        if "fut" in bc:           # FutureFill epoched exact decode
+            sub = {k: bc[k] for k in ("conv", "kv", "fut", "epoch")}
+            if conv_filters is None:
+                conv_filters = hyena_mod.materialize_filters(
+                    bp["mix"]["filter"], bc["kv"].shape[1], cfg.hyena)
+            sub, y = hyena_mod.hyena_decode_epoch_chunk(
+                bp["mix"], sub, h, pos, active_len, cfg, conv_filters,
+                ctx=ctx)
+        elif "kv" in bc:          # Lemma-2.1 cached-conv baseline
             sub = {k: bc[k] for k in ("conv", "kv")}
             if conv_filters is None:
                 conv_filters = hyena_mod.materialize_filters(
@@ -849,7 +870,7 @@ def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
                     pad = [(0, 0)] * v.ndim
                     pad[seq_axis] = (0, max_len - v.shape[seq_axis])
                     out[k] = jnp.pad(v.astype(jnp.bfloat16), pad)
-            elif k == "kv":                    # hyena cached-conv kv products
+            elif k in ("kv", "fut"):   # hyena conv/epoch sequence buffers
                 pad = [(0, 0)] * v.ndim
                 pad[seq_axis] = (0, max_len - v.shape[seq_axis])
                 out[k] = jnp.pad(v, pad)
@@ -932,7 +953,7 @@ def _init_block_prefill_cache(kind: str, cfg: ModelConfig, batch: int,
         hc = hyena_mod.init_hyena_conv_cache(batch, buf_len, cfg)
         c["conv"] = Param(hc["conv"], ("batch", None, "qkv"))
         c["kv"] = Param(hc["kv"], ("batch", "kv_seq", "qkv"))
-        if cache_kind != "conv":
+        if cache_kind == "native":
             nc = hyena_mod.init_hyena_cache(batch, cfg)
             c["x_re"] = Param(nc["x_re"], ("batch", "qkv", "state"))
             c["x_im"] = Param(nc["x_im"], ("batch", "qkv", "state"))
@@ -1121,6 +1142,13 @@ def finalize_prefill_cache(cache, length, cfg: ModelConfig, max_len: int, *,
             else:
                 out = {"conv": c["conv"],
                        "kv": trim(c["kv"], seq_axis, max_len)}
+                if cache_kind == "epoch":
+                    # fresh FutureFill state: epoch 0 / fut empty — the first
+                    # decode tick's flush bakes the prefix in (exact either
+                    # way; see hyena_decode_epoch)
+                    out["fut"] = jnp.zeros_like(out["kv"])
+                    out["epoch"] = jnp.zeros(
+                        c["kv"].shape[:seq_axis - 1] + (B,), jnp.int32)
         return out
 
     groups = {lk: fix(lv, cfg.pattern[int(lk[1:])], seq_axis=2)
@@ -1301,7 +1329,10 @@ def slot_health(cache, logits, bound):
 
     def add_block(c, batch_axis: int):
         for k, v in c.items():
-            if k in _SEQ_KEYS or k in ("cross_k", "cross_v"):
+            if k in _SEQ_KEYS or k in ("cross_k", "cross_v", "fut"):
+                # `fut` is an O(max_len) buffer like kv: corruption reaches
+                # the slot's logits row additively, so the logits check
+                # covers it without an O(max_len) reduction here
                 continue
             if not jnp.issubdtype(v.dtype, jnp.inexact):
                 continue

@@ -117,8 +117,8 @@ def load_checkpoint(path: str) -> Dict[str, Any]:
 def restore_engine(engine, state) -> None:
     """Load a `save_engine` snapshot into a freshly constructed engine (same
     arch/params and construction shape). Restoring a snapshot taken after a
-    distilled→cached-conv demotion into a distilled engine replays the
-    demotion first. Resumes bit-exactly: resident slots continue from their
+    mode-ladder demotion (distilled→cached_conv→epoch) into a higher-mode
+    engine replays the demotion first. Resumes bit-exactly: resident slots continue from their
     exact cache rows, stream counters, and last tokens."""
     if isinstance(state, str):
         state = load_checkpoint(state)
@@ -147,11 +147,20 @@ def restore_engine(engine, state) -> None:
                 f"mesh (or restore single-device from a single-device "
                 f"snapshot)")
     if state["mode"] != engine.mode:
-        if state["mode"] == "cached_conv" and engine.mode == "distilled":
-            engine._demote_to_conv()
+        from repro.serve.scheduler import MODE_LADDER
+        saved_rung = (MODE_LADDER.index(state["mode"])
+                      if state["mode"] in MODE_LADDER else -1)
+        here_rung = MODE_LADDER.index(engine.mode)
+        if saved_rung > here_rung:
+            # snapshot was taken after the engine walked down the ladder
+            # (fault quarantine or drift alarm): replay the demotion so the
+            # restored pool kind matches the saved cache buffers
+            engine._demote_engine(state["mode"])
         else:
-            raise ValueError(f"checkpoint mode {state['mode']!r} does not "
-                             f"match engine mode {engine.mode!r}")
+            raise ValueError(
+                f"checkpoint mode {state['mode']!r} does not match engine "
+                f"mode {engine.mode!r} (a snapshot only restores into the "
+                f"same mode or one higher on the ladder {MODE_LADDER})")
     engine._pending = None
     engine._chunk_state = None
     engine.cache = engine._put_pool(state["cache"], engine._cache_sh)

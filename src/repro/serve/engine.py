@@ -5,6 +5,8 @@ engine exposes the paper's deployment modes:
 
   * "distilled"   — LaughingHyena recurrent mode: O(d) per token, O(d) state
   * "cached_conv" — Lemma 2.1 baseline: O(t) per token, O(L) kv-product cache
+  * "epoch"       — FutureFill epoched convolution: exact output from the
+                    TRUE long filter at amortized O(sqrt(L) log L) per token
   * (transformers use their native kv cache; SSM/hybrid their native state)
 
 Both modes run through the same jitted `prefill` / `decode_step` pair — the
@@ -114,10 +116,10 @@ class GenerationEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_len: int = 4096,
                  ctx: ShardCtx = NOCTX, mode: str = "distilled",
                  tracer=None):
-        if mode not in ("distilled", "cached_conv"):
+        if mode not in ("distilled", "cached_conv", "epoch"):
             raise ValueError(f"unknown mode {mode!r}")
-        if mode == "cached_conv" and cfg.hyena is None:
-            raise ValueError("cached_conv mode requires a Hyena (LCSM) arch")
+        if mode in ("cached_conv", "epoch") and cfg.hyena is None:
+            raise ValueError(f"{mode} mode requires a Hyena (LCSM) arch")
         from repro.serve.trace import NULL_TRACER
         self.tracer = NULL_TRACER if tracer is None else tracer
         self.params = params
@@ -125,12 +127,14 @@ class GenerationEngine:
         self.max_len = max_len
         self.ctx = ctx
         self.mode = mode
-        self.cache_kind = "conv" if mode == "cached_conv" else "native"
+        self.cache_kind = {"distilled": "native", "cached_conv": "conv",
+                           "epoch": "epoch"}[mode]
         self._decode = jitted_decode_step(cfg, ctx)
         self._prefill = jitted_prefill(cfg, max_len, self.cache_kind, ctx)
-        # cached-conv mode: materialize the long filters once, not per token
+        # conv/epoch modes: materialize the long filters once, not per token
         self._conv_filters = (materialize_conv_filters(params, cfg, max_len)
-                              if self.cache_kind == "conv" else None)
+                              if self.cache_kind in ("conv", "epoch")
+                              else None)
 
     def generate(self, key, prompt: jnp.ndarray, n_tokens: int, *,
                  temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,

@@ -16,6 +16,11 @@ injector replies with what to break this tick:
     watchdog.
   * ``expire``  — force one resident request's deadline into the past.
     Exercises deadline eviction.
+  * ``drift``   — silently scale one resident slot's serving state by
+    (1 + value) via `drift_cache_slot`: the perturbation stays finite and
+    inside the modal-norm bound, so it is invisible to the NaN/Inf and
+    norm guards — only the drift sentinel's exact-path shadow decode
+    detects it. Exercises the sentinel + epoch-demotion path.
 
 Everything is deterministic: slot choice for events that don't pin one uses
 a counter-seeded `np.random.default_rng`, never wall clock, so a schedule
@@ -32,14 +37,14 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-_KINDS = ("corrupt", "raise", "stall", "expire")
+_KINDS = ("corrupt", "raise", "stall", "expire", "drift")
 _WHERES = ("state", "conv", "seq", "any")
 
 # leaf-name classification mirroring models.model._init_block_cache
 _WHERE_KEYS = {
     "state": ("x_re", "x_im", "ssm", "h"),
     "conv": ("conv",),
-    "seq": ("k", "v", "kv"),
+    "seq": ("k", "v", "kv", "fut"),
 }
 
 
@@ -125,6 +130,9 @@ class FaultInjector:
     def expirations(self, tick: int) -> List[FaultEvent]:
         return self._at(tick, "expire")
 
+    def drifts(self, tick: int) -> List[FaultEvent]:
+        return self._at(tick, "drift")
+
     def pick_slot(self, event: FaultEvent, tick: int,
                   residents: Sequence[int]) -> Optional[int]:
         """Event's pinned slot if resident, else a seeded deterministic pick
@@ -181,4 +189,37 @@ def corrupt_cache_slot(cache, slot: int, where: str = "state",
            "pos": cache["pos"]}
     if "rem" in cache:
         out["rem"] = [poison(rc, 0) for rc in cache["rem"]]
+    return out
+
+
+def drift_cache_slot(cache, slot: int, eps: float = 0.05):
+    """Silently perturb slot `slot`'s serving state: scale the recurrent
+    state leaves (modal x_re/x_im, SSM/RG-LRU state) — or, on cache kinds
+    without one, the conv tail — by (1 + eps). Unlike `corrupt_cache_slot`
+    the result stays finite and, for moderate eps, inside the modal-norm
+    bound, so the NaN/Inf and norm guards never fire; only the drift
+    sentinel's exact-path shadow decode can tell the slot has gone wrong.
+    Same axis conventions as `corrupt_cache_slot`."""
+    if not math.isfinite(eps):
+        eps = 0.05                   # FaultEvent.value defaults to nan
+    targets = _WHERE_KEYS["state"]
+    blocks = list(cache["groups"].values()) + list(cache.get("rem") or [])
+    if not any(k in c for c in blocks for k in targets):
+        targets = _WHERE_KEYS["conv"]    # exact kinds: skew the short conv
+
+    def scale(c, batch_axis: int):
+        out = dict(c)
+        for k, v in c.items():
+            if k not in targets or not jnp.issubdtype(v.dtype, jnp.inexact):
+                continue
+            if batch_axis == 1:
+                out[k] = v.at[:, slot].multiply(1.0 + eps)
+            else:
+                out[k] = v.at[slot].multiply(1.0 + eps)
+        return out
+
+    out = {"groups": {lk: scale(lv, 1) for lk, lv in cache["groups"].items()},
+           "pos": cache["pos"]}
+    if "rem" in cache:
+        out["rem"] = [scale(rc, 0) for rc in cache["rem"]]
     return out

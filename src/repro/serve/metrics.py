@@ -52,6 +52,11 @@ WINDOW_BUCKETS: Tuple[float, ...] = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
 RATIO_BUCKETS: Tuple[float, ...] = (0.0, 0.125, 0.25, 0.375, 0.5, 0.625,
                                     0.75, 0.875, 1.0)
 DEPTH_BUCKETS: Tuple[float, ...] = (0, 1, 2, 4, 8, 16, 32, 64, 128)
+# log-spaced |log-softmax| divergence buckets for the drift sentinel: the
+# healthy distilled-vs-exact gap sits near float32 noise (1e-6..1e-3), a
+# drifting slot climbs orders of magnitude above it
+DRIFT_BUCKETS: Tuple[float, ...] = (
+    1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0)
 
 
 class Counter:
@@ -418,7 +423,7 @@ RESILIENCE_KEYS = (
     "health_failures",      # device health bitvector flagged a slot
     "slot_reprefills",      # quarantined slot re-prefilled from its tokens
     "spec_demotions",       # slot demoted from speculation to plain decode
-    "engine_demotions",     # distilled engine demoted to exact cached-conv
+    "engine_demotions",     # engine walked one rung down the mode ladder
     "deadline_expiries",    # request evicted past its deadline
     "rejected",             # admission refused: queue at capacity
     "poisoned",             # request finished with error after max retries
@@ -427,6 +432,8 @@ RESILIENCE_KEYS = (
     "checkpoint_saves",
     "checkpoint_restores",
     "spec_window_syncs",    # controller window vector uploaded to the pool
+    "drift_checks",         # sentinel shadow-decodes of a resident slot
+    "drift_alarms",         # sentinel divergence exceeded drift_tol
 )
 
 

@@ -36,8 +36,9 @@ those rows:
                   zeroed) and the next queued request admitted.
 
 Deployment modes (paper Sec. 2.2 / 5.4): "distilled" (LaughingHyena modal
-recurrence), "cached_conv" (Lemma 2.1 O(t) baseline), and the native mode of
-non-LCSM archs (attention KV cache, Mamba2/RG-LRU state).
+recurrence), "cached_conv" (Lemma 2.1 O(t) baseline), "epoch" (FutureFill
+epoched convolution — exact at amortized O(sqrt(L) log L) per token), and
+the native mode of non-LCSM archs (attention KV cache, Mamba2/RG-LRU state).
 
 Guarantee (tested): greedy outputs are token-for-token identical to
 sequential single-request generation with bucketing, chunking, and the
@@ -64,13 +65,15 @@ from repro.configs.base import ModelConfig
 from repro.distributed.sharding import (SLOT_RULES, slot_axes, tree_shardings,
                                         unzip)
 from repro.models.layers import NOCTX, ShardCtx
-from repro.models.model import (init_cache, init_prefill_cache,
+from repro.models.model import (gather_cache_rows, init_cache,
+                                init_prefill_cache,
                                 materialize_conv_filters, modal_state_bound,
                                 reset_cache_slot, slot_health,
                                 write_cache_slot, write_cache_slots)
-from repro.serve.faults import FaultError, corrupt_cache_slot
-from repro.serve.metrics import (MetricsRegistry, RATIO_BUCKETS,
-                                 ResilienceCounters, WINDOW_BUCKETS)
+from repro.serve.faults import FaultError, corrupt_cache_slot, drift_cache_slot
+from repro.serve.metrics import (DRIFT_BUCKETS, MetricsRegistry,
+                                 RATIO_BUCKETS, ResilienceCounters,
+                                 WINDOW_BUCKETS)
 from repro.serve.sampling import sample_token_slots
 from repro.serve.trace import NULL_TRACER
 from repro.serve.speculative import DRAW_TAG, token_keys
@@ -78,7 +81,20 @@ from repro.serve.speculative import DRAW_TAG, token_keys
 QUEUED, PREFILLING, RUNNING, FINISHED, ERROR = (
     "queued", "prefilling", "running", "finished", "error")
 
+# Engine recovery ladder (serve/README.md "Exact fallback & drift sentinel"):
+# distilled (O(d)/token, distillation error) -> cached_conv (exact, O(t)) ->
+# epoch (exact, amortized O(sqrt(L) log L) — FutureFill). Demotions only walk
+# right.
+MODE_LADDER = ("distilled", "cached_conv", "epoch")
+_MODE_KINDS = {"distilled": "native", "cached_conv": "conv", "epoch": "epoch"}
+
 _SLOT_JITS: Dict[Any, Callable] = {}
+
+
+def _log_softmax_np(x: np.ndarray) -> np.ndarray:
+    """Host-side log-softmax over the last axis (drift-sentinel compare)."""
+    x = x - x.max(axis=-1, keepdims=True)
+    return x - np.log(np.exp(x).sum(axis=-1, keepdims=True))
 
 
 def _jitted(name: str, fn, *, key=None, **jit_kw):
@@ -283,16 +299,18 @@ class ContinuousBatchingEngine:
                  max_retries: int = 2, retry_backoff_ticks: int = 0,
                  demote_spec_after: int = 2,
                  demote_engine_after: Optional[int] = None,
+                 drift_check_every: int = 0,
+                 drift_tol: Optional[float] = None,
                  deadline_s: Optional[float] = None,
                  max_queue: Optional[int] = None,
                  watchdog_s: Optional[float] = None,
                  fault_injector=None, tracer=None,
                  metrics: Optional[MetricsRegistry] = None,
                  events_limit: Optional[int] = 256):
-        if mode not in ("distilled", "cached_conv"):
+        if mode not in MODE_LADDER:
             raise ValueError(f"unknown mode {mode!r}")
-        if mode == "cached_conv" and cfg.hyena is None:
-            raise ValueError("cached_conv mode requires a Hyena (LCSM) arch")
+        if mode in ("cached_conv", "epoch") and cfg.hyena is None:
+            raise ValueError(f"{mode} mode requires a Hyena (LCSM) arch")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}"
                              " (None disables chunked prefill)")
@@ -316,7 +334,7 @@ class ContinuousBatchingEngine:
         self._overlap = overlap
         self._prefill_batch = max(1, max_prefills_per_step)
         self._clock = clock
-        cache_kind = "conv" if mode == "cached_conv" else "native"
+        cache_kind = _MODE_KINDS[mode]
         self._cache_kind = cache_kind
         # --- slot-pool sharding (serve/README.md "Sharded slot pool") ---
         # every per-slot buffer (the pooled cache + the metadata vectors)
@@ -385,14 +403,16 @@ class ContinuousBatchingEngine:
         self._meta = _jitted("slot_meta", _update_slot_meta,
                              key=self._shard_tag("meta"),
                              **self._vec_out(7))
-        # long filters: cached-conv decode always needs them; chunked prefill
-        # needs them for any Hyena layer in either mode
-        need_filters = cfg.hyena is not None and (cache_kind == "conv"
+        # long filters: cached-conv / epoch decode always needs them; chunked
+        # prefill needs them for any Hyena layer in every mode
+        need_filters = cfg.hyena is not None and (cache_kind in
+                                                  ("conv", "epoch")
                                                   or prefill_chunk)
         self._conv_filters = (self._replicate(
             materialize_conv_filters(params, cfg, max_len))
-            if cache_kind == "conv" else None)
-        self._chunk_filters = (self._conv_filters if cache_kind == "conv"
+            if cache_kind in ("conv", "epoch") else None)
+        self._chunk_filters = (self._conv_filters
+                               if cache_kind in ("conv", "epoch")
                                else (self._replicate(
                                    materialize_conv_filters(params, cfg,
                                                             max_len))
@@ -421,8 +441,8 @@ class ContinuousBatchingEngine:
         # native (distilled) serving: the draft's truncated modes are a
         # subset of the serving state, so the draft reads the serving cache
         # directly (embedded residues) — no second pool, no draft prefill.
-        # cached-conv serving keeps a separate native draft pool: that is
-        # the paper's classic pair (exact Lemma-2.1 target, O(d) draft).
+        # cached-conv / epoch serving keeps a separate native draft pool:
+        # that is the paper's classic pair (exact target, O(d) draft).
         self._draft_shared = cache_kind == "native"
         self._spec_ctl = None
         if self._spec:
@@ -554,6 +574,37 @@ class ContinuousBatchingEngine:
         self._demote_spec_after = int(demote_spec_after)
         self._demote_engine_after = demote_engine_after
         self._distilled_faults = 0
+        # --- drift sentinel (serve/README.md "Exact fallback & drift
+        # sentinel") --- every `drift_check_every` ticks one resident slot
+        # (rotating cursor) is shadow-decoded a single step through the
+        # exact epoch path off the critical path; |log-softmax| divergence
+        # beyond `drift_tol` demotes the engine straight to mode="epoch".
+        # Only the distilled mode carries distillation error, so the
+        # sentinel arms there and disarms after any demotion.
+        self._drift_every = max(0, int(drift_check_every))
+        self._drift_tol = drift_tol
+        self._drift_cursor = 0
+        self._drift_last: Optional[float] = None
+        self._drift_certificate = None
+        self._sentinel = (self._drift_every > 0 and mode == "distilled"
+                          and cfg.hyena is not None)
+        self._h_drift = _m.histogram(
+            "serve_drift_logit_div", DRIFT_BUCKETS,
+            help="sentinel max |log-softmax| gap, distilled vs exact path")
+        if self._sentinel:
+            from repro.serve.engine import (jitted_decode_step,
+                                            jitted_prefill)
+            self._drift_prefill = jitted_prefill(cfg, max_len, "epoch", ctx)
+            # the shadow decode replays ONE gathered row; without pinned
+            # out_shardings it takes the plain memo entry, so it never
+            # aliases (or recompiles) the pool-pinned decode executable
+            self._drift_decode = jitted_decode_step(cfg, ctx)
+            self._drift_filters = (
+                self._chunk_filters if self._chunk_filters is not None
+                else self._replicate(
+                    materialize_conv_filters(params, cfg, max_len)))
+            self._gather_rows = _jitted("gather_rows", gather_cache_rows,
+                                        key=self._shard_tag("drift"))
         self._deadline_s = deadline_s
         self._any_deadline = deadline_s is not None
         self._max_queue = max_queue
@@ -803,16 +854,24 @@ class ContinuousBatchingEngine:
         self._tick += 1
         tr = self.tracer
         t_step0 = self._clock()
+        emitted = 0
         if self._injector is not None:
             with tr.span("faults"):
                 self._apply_scheduled_faults()
+        if self._sentinel and self._tick % self._drift_every == 0:
+            # sentinel sync point: retire the in-flight tick first so the
+            # host-side token record matches the at-rest device cache
+            with tr.span("drift_check"):
+                prev0, self._pending = self._pending, None
+                emitted += self._retire(prev0)
+                self._drift_check()
         dispatch = self._dispatch_spec if self._spec else self._dispatch_decode
         prev, self._pending = self._pending, None
         if self._overlap and self.n_active > 0:
             with tr.span("dispatch"):
                 self._pending = self._safe_dispatch(dispatch)
         with tr.span("retire"):
-            emitted = self._retire(prev)
+            emitted += self._retire(prev)
         if self._any_deadline:
             with tr.span("deadline_sweep"):
                 self._sweep_deadlines()
@@ -876,9 +935,9 @@ class ContinuousBatchingEngine:
         c.inc(n)
 
     def _apply_scheduled_faults(self) -> None:
-        """Fire this tick's scripted faults (corrupt / expire / stall); the
-        "raise" kind fires inside _safe_dispatch so it lands exactly where a
-        real dispatch failure would."""
+        """Fire this tick's scripted faults (corrupt / drift / expire /
+        stall); the "raise" kind fires inside _safe_dispatch so it lands
+        exactly where a real dispatch failure would."""
         inj = self._injector
         tick = self._tick
         residents = [b for b in range(self.n_slots) if self.active[b]]
@@ -888,6 +947,13 @@ class ContinuousBatchingEngine:
                 continue
             self.cache = corrupt_cache_slot(self.cache, b, e.where, e.value)
             inj.record(tick, "corrupt", slot=b, where=e.where)
+        for e in inj.drifts(tick):
+            b = inj.pick_slot(e, tick, residents)
+            if b is None:
+                continue
+            eps = e.value if math.isfinite(e.value) else 0.05
+            self.cache = drift_cache_slot(self.cache, b, eps)
+            inj.record(tick, "drift", slot=b, eps=eps)
         for e in inj.expirations(tick):
             b = inj.pick_slot(e, tick, residents)
             if b is None or self.slots[b] is None:
@@ -951,6 +1017,82 @@ class ContinuousBatchingEngine:
                 self.resilience.bump("deadline_expiries")
                 self._record_event("deadline", rid=req.rid, where="running")
                 self._finish_error(req, "deadline")
+
+    # ------------------------------------------------------------------
+    # drift sentinel (serve/README.md "Exact fallback & drift sentinel")
+    # ------------------------------------------------------------------
+    @property
+    def drift_certificate(self):
+        """Static distillation-error certificate
+        (core.distill.distillation_certificate), computed lazily and
+        cached — the bench drift gate compares the sentinel's measured
+        divergence against its per-layer tail bounds."""
+        if self._drift_certificate is None and self.cfg.hyena is not None:
+            from repro.core.distill import distillation_certificate
+            self._drift_certificate = distillation_certificate(
+                self.params, self.cfg, self.max_len)
+        return self._drift_certificate
+
+    def _drift_check(self) -> None:
+        """Shadow-verify one resident slot through the exact path: replay
+        its prompt + committed tokens through the epoch-kind prefill (the
+        TRUE long filter, full causal FFT) and decode the same last token
+        once on a gathered copy of its distilled pool row — both produce
+        the next-token distribution, so any |log-softmax| gap beyond
+        float32 noise is accumulated distillation error or silent state
+        corruption. Off the critical path: runs at the sentinel sync point
+        (pending already retired, slot caches at rest), touches only a
+        copy of the slot row, and costs one 1-row bucketed prefill.
+        Divergence beyond `drift_tol` demotes the engine to mode="epoch"
+        and re-prefills every resident through the exact path."""
+        residents = [b for b in range(self.n_slots)
+                     if self.active[b] and self.slots[b] is not None
+                     and self.slots[b].status == RUNNING
+                     and self.slots[b].tokens]
+        if not residents:
+            return
+        b = residents[self._drift_cursor % len(residents)]
+        self._drift_cursor += 1
+        req = self.slots[b]
+        seq = np.concatenate([req.prompt, np.asarray(req.tokens, np.int32)])
+        L = int(len(seq))
+        if L > self.max_len:
+            return
+        bkt = self._bucket_of(L)
+        toks = np.zeros((1, bkt), np.int32)
+        toks[0, :L] = seq
+        _, exact = self._drift_prefill(self.params, jnp.asarray(toks),
+                                       lengths=jnp.asarray([L], jnp.int32))
+        # distilled side: decode on a host-round-tripped copy of the slot's
+        # pool row — the copy keeps the pool out of the decode donation and
+        # normalizes placement so the shadow decode holds ONE executable
+        row = jax.device_get(self._gather_rows(self.cache,
+                                               jnp.asarray([b], jnp.int32)))
+        # numpy first: jnp.asarray on a nested python list dispatches a
+        # convert_element_type executable; np -> jax is a plain device put
+        tok = jnp.asarray(np.asarray([[req.tokens[-1]]], np.int32))
+        _, approx = self._drift_decode(self.params, row, tok,
+                                       conv_filters=None)
+        # device_get whole arrays, index on host: slicing a jax array
+        # here would dispatch tiny dynamic_slice/squeeze executables and
+        # break the zero-steady-state-compiles guarantee
+        e = _log_softmax_np(np.asarray(jax.device_get(exact),
+                                       np.float64)[0])
+        a = _log_softmax_np(np.asarray(jax.device_get(approx),
+                                       np.float64)[0, 0])
+        div = float(np.max(np.abs(e - a)))
+        if not math.isfinite(div):
+            # a NaN/Inf shadow comparison means the distilled row no longer
+            # produces a distribution at all — maximal drift, not a skip
+            div = float("inf")
+        self._drift_last = div
+        self._h_drift.observe(div)
+        self.resilience.bump("drift_checks")
+        if self._drift_tol is not None and div > self._drift_tol:
+            self.resilience.bump("drift_alarms")
+            self._record_event("drift_alarm", rid=req.rid, slot=b,
+                               divergence=round(div, 6))
+            self._demote_engine("epoch")
 
     def run(self) -> List[Request]:
         """Drain queue + residents to completion; returns finished requests."""
@@ -1088,6 +1230,26 @@ class ContinuousBatchingEngine:
                 warm.append(self._health_state(self.cache, self._state_bound))
             self.cache = self._reset_slot(self.cache, 0)    # idle at warmup
             jax.block_until_ready(warm)
+        if self._sentinel:
+            # drift-sentinel dispatches: 1-row epoch-kind prefill at every
+            # power-of-two bucket (a resident can be checked at any length
+            # up to max_len), plus the row gather + 1-row shadow decode —
+            # so a sentinel tick never compiles in the steady state
+            bkt = self._min_bucket
+            while True:
+                bkt = min(bkt, self.max_len)
+                self._drift_prefill(self.params,
+                                    jnp.zeros((1, bkt), jnp.int32),
+                                    lengths=jnp.asarray([bkt], jnp.int32))
+                if bkt == self.max_len:
+                    break
+                bkt <<= 1
+            row = jax.device_get(self._gather_rows(
+                self.cache, jnp.asarray([0], jnp.int32)))
+            _, lg = self._drift_decode(self.params, row,
+                                       jnp.zeros((1, 1), jnp.int32),
+                                       conv_filters=None)
+            jax.block_until_ready(lg)
 
     def prefill_compile_stats(self) -> Dict[str, Any]:
         """Executable counts backing the O(#buckets) claim. Note the jit memo
@@ -1645,8 +1807,8 @@ class ContinuousBatchingEngine:
         either re-prefill the request exactly from its committed tokens
         (bounded retries with backoff) or — past max_retries — complete it
         with ERROR status. Repeated quarantines demote the request to plain
-        decode, and (opt-in) repeated distilled-path corruption demotes the
-        whole engine to the exact cached-conv path."""
+        decode, and (opt-in) repeated corruption demotes the whole engine
+        one rung down the MODE_LADDER (distilled -> cached_conv -> epoch)."""
         self.resilience.bump("health_failures")
         req.retries += 1
         self._record_event("quarantine", rid=req.rid, slot=slot,
@@ -1655,8 +1817,8 @@ class ContinuousBatchingEngine:
         self.cache = self._reset_slot(self.cache, slot)
         if self._spec and not self._draft_shared:
             self.draft_cache = self._reset_slot_d(self.draft_cache, slot)
-        if self.mode == "distilled":
-            self._distilled_faults += 1
+        if self.mode in ("distilled", "cached_conv"):
+            self._distilled_faults += 1      # faults since the last demotion
         if req.retries > self.max_retries:
             self.resilience.bump("poisoned")
             self._record_event("poisoned", rid=req.rid)
@@ -1669,9 +1831,10 @@ class ContinuousBatchingEngine:
             self.resilience.bump("slot_reprefills")
             self._requeue_for_recovery(req)
         if (self._demote_engine_after is not None
-                and self.mode == "distilled"
+                and self.mode in ("distilled", "cached_conv")
                 and self._distilled_faults >= self._demote_engine_after):
-            self._demote_to_conv()
+            nxt = MODE_LADDER[MODE_LADDER.index(self.mode) + 1]
+            self._demote_engine(nxt)
 
     def _rebuild_pool(self) -> None:
         """A dispatch raised mid-flight: the jitted step donates the pool
@@ -1708,15 +1871,22 @@ class ContinuousBatchingEngine:
         self._record_event("pool_rebuild")
 
     def _demote_to_conv(self) -> None:
-        """Engine-wide graceful degradation: repeated distilled-path
-        corruption swaps the serving path to the exact Lemma-2.1 cached-conv
-        cache kind (no distillation error to diverge). Residents are
-        recovered through the normal re-prefill path; speculation is
-        disabled (the shared-state draft read the distilled cache). A
-        one-time recompile of prefill/decode for the conv kind is the
-        accepted cost of the fallback."""
-        if self.mode != "distilled" or self.cfg.hyena is None:
+        self._demote_engine("cached_conv")
+
+    def _demote_engine(self, target: str) -> None:
+        """Engine-wide graceful degradation down the MODE_LADDER: repeated
+        corruption walks one rung (distilled -> cached_conv -> epoch), a
+        drift alarm jumps straight to "epoch" (the FutureFill path serves
+        the TRUE filter exactly at amortized near-linear cost, so there is
+        no distillation error left to drift). Residents are recovered
+        through the normal re-prefill path — through the exact path, for a
+        drift demotion; speculation is disabled (the shared-state draft
+        read the distilled cache). A one-time recompile of prefill/decode
+        for the new kind is the accepted cost of the fallback."""
+        if self.cfg.hyena is None or target not in MODE_LADDER:
             return
+        if MODE_LADDER.index(target) <= MODE_LADDER.index(self.mode):
+            return                             # demotions only walk down
         # drop (don't retire) the in-flight tick: its tokens are uncommitted
         # and every resident is about to re-prefill from committed tokens —
         # retiring here could recursively re-trigger demotion
@@ -1735,22 +1905,24 @@ class ContinuousBatchingEngine:
                 self._release_slot(b)
                 self.resilience.bump("slot_reprefills")
                 self._requeue_for_recovery(req)
-        self.mode = "cached_conv"
-        self._cache_kind = "conv"
-        self.cache, self._cache_sh = self._make_pool(self.cfg, "conv")
+        self.mode = target
+        kind = _MODE_KINDS[target]
+        self._cache_kind = kind
+        self.cache, self._cache_sh = self._make_pool(self.cfg, kind)
         self._conv_filters = self._replicate(
             materialize_conv_filters(self.params, self.cfg, self.max_len))
         self._chunk_filters = self._conv_filters
-        # the conv pool has a different tree structure (and shardings), so
+        # the new pool has a different tree structure (and shardings), so
         # every pool-pinned executable is rebuilt for the new cache kind
         self._build_pool_ops()
         self._spec = False
         self._spec_ctl = None
         self.draft_cache = None
-        self._state_bound = float("inf")       # conv kind: finiteness only
+        self._state_bound = float("inf")   # exact kinds: finiteness only
         self._distilled_faults = 0
+        self._sentinel = False         # only the distilled path can drift
         self.resilience.bump("engine_demotions")
-        self._record_event("engine_demotion", to="cached_conv")
+        self._record_event("engine_demotion", to=target)
 
 
 # ---------------------------------------------------------------------------

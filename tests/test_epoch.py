@@ -1,0 +1,302 @@
+"""Epoched-FFT exact serving path + online distillation-drift sentinel.
+
+The epoch cache kind (FutureFill-style epoched convolution) is an EXACT
+realization of the long convolution: greedy decode through it must be
+token-identical to the cached-conv path in every serving configuration
+(plain, chunked prefill, speculative, checkpoint/restore). The drift
+sentinel shadow-verifies the distilled engine against this exact path and
+demotes the engine down the mode ladder when the divergence exceeds the
+tolerance.
+
+The sentinel tests run on a model whose distillation is near-exact
+(distill_order high relative to the 48-token horizon): the sentinel can
+only flag drift LARGER than the genuine distillation error, so the clean
+shadow divergence must sit well below the tolerance (here ~1e-2 vs 0.5)
+while a sign-flipped state sits well above (~2+). The injected fault
+(value=-2.0 => state scaled by -1) is norm-preserving, so the norm-margin
+health guard cannot catch it — only the sentinel can.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ATTN, HYENA, HyenaConfig, ModelConfig
+from repro.core.distill import distill_model, distillation_certificate
+from repro.distributed.sharding import unzip
+from repro.models.model import init_params
+from repro.serve.checkpoint import restore_engine, save_engine
+from repro.serve.engine import GenerationEngine
+from repro.serve.faults import FaultInjector
+from repro.serve.scheduler import ContinuousBatchingEngine
+
+MAX_LEN = 48
+PROMPT_LENS = (5, 9, 17, 12)
+GEN = 10
+
+
+def _cfg():
+    return ModelConfig(name="epoch-hyena", family="lcsm", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=64, vocab=64, act="gelu", norm="layernorm",
+                       pattern=(HYENA,),
+                       hyena=HyenaConfig(n_filter_heads=2, filter_order=16,
+                                         filter_emb=9, distill_order=32),
+                       max_seq=512, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def distilled_model():
+    cfg = _cfg()
+    params, _ = unzip(init_params(jax.random.PRNGKey(0), cfg))
+    params, _ = distill_model(params, cfg, steps=400, L=MAX_LEN)
+    return cfg, params
+
+
+def _prompts(vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=n).astype(np.int32)
+            for n in PROMPT_LENS]
+
+
+def _run(cfg, params, mode, **kw):
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode=mode, **kw)
+    reqs = [eng.submit(p, max_new_tokens=GEN) for p in _prompts(cfg.vocab)]
+    eng.run()
+    assert all(r.status == "finished" for r in reqs), \
+        [(r.rid, r.status) for r in reqs]
+    return {r.rid: list(r.tokens) for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# exactness: epoch == cached_conv, token for token
+# ---------------------------------------------------------------------------
+def test_epoch_matches_cached_conv_scheduler(distilled_model):
+    """Greedy token identity through the slot pool: the epoched convolution
+    is exact, so it must reproduce the cached-conv reference bit-for-bit
+    (bucketed prefill, queueing, slot reuse all exercised)."""
+    cfg, params = distilled_model
+    assert _run(cfg, params, "epoch") == _run(cfg, params, "cached_conv")
+
+
+def test_epoch_chunked_prefill_identity(distilled_model):
+    """Chunked prefill through the epoch kind (entry flush + widened decode
+    window + end flush) changes nothing."""
+    cfg, params = distilled_model
+    want = _run(cfg, params, "cached_conv")
+    assert _run(cfg, params, "epoch", prefill_chunk=4) == want
+
+
+def test_epoch_speculative_identity(distilled_model):
+    """Self-speculation over the epoch pool (native-kind draft, multi-token
+    verify through the epoched conv) stays token-identical."""
+    cfg, params = distilled_model
+    want = _run(cfg, params, "cached_conv")
+    assert _run(cfg, params, "epoch", spec_k=2, spec_adapt=False) == want
+
+
+def test_epoch_generation_engine_long_decode(distilled_model):
+    """Single-request decode far past several epoch flush boundaries
+    (epoch tail E=8 at max_len=48) matches cached-conv exactly."""
+    cfg, params = distilled_model
+    prompt = jnp.asarray(_prompts(cfg.vocab)[1])[None]
+    outs = []
+    for mode in ("cached_conv", "epoch"):
+        eng = GenerationEngine(params, cfg, max_len=MAX_LEN, mode=mode)
+        toks, _ = eng.generate(jax.random.PRNGKey(1), prompt, 30)
+        outs.append(np.asarray(toks[0]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_epoch_mode_validation(distilled_model):
+    cfg, params = distilled_model
+    with pytest.raises(ValueError, match="mode"):
+        ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                 mode="nonsense")
+    acfg = ModelConfig(name="epoch-attn", family="dense", n_layers=1,
+                       d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=64, vocab=64, act="gelu", norm="layernorm",
+                       pattern=(ATTN,), max_seq=512, dtype="float32")
+    aparams, _ = unzip(init_params(jax.random.PRNGKey(0), acfg))
+    with pytest.raises(ValueError, match="Hyena"):
+        ContinuousBatchingEngine(aparams, acfg, n_slots=2, max_len=MAX_LEN,
+                                 mode="epoch")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore across the mode ladder
+# ---------------------------------------------------------------------------
+def test_epoch_checkpoint_restore_bit_exact(distilled_model, tmp_path):
+    """Mid-run snapshot of an epoch engine restores into a fresh epoch
+    engine and finishes token-identically to an uninterrupted run."""
+    cfg, params = distilled_model
+    want = _run(cfg, params, "epoch")
+    path = str(tmp_path / "epoch.ckpt")
+
+    eng_a = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                     mode="epoch")
+    for p in _prompts(cfg.vocab):
+        eng_a.submit(p, max_new_tokens=GEN)
+    for _ in range(8):
+        if eng_a.has_work:
+            eng_a.step()
+    save_engine(eng_a, path)
+    del eng_a
+
+    eng_b = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                     mode="epoch")
+    restore_engine(eng_b, path)
+    eng_b.run()
+    assert {r.rid: list(r.tokens) for r in eng_b.finished} == want
+
+
+def test_checkpoint_ladder_demotion_replay(distilled_model):
+    """A snapshot taken after the engine walked down the mode ladder
+    restores into a fresh higher-mode engine by replaying the demotion; the
+    reverse direction (up-ladder) is rejected with a clear error."""
+    cfg, params = distilled_model
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode="distilled")
+    for p in _prompts(cfg.vocab):
+        eng.submit(p, max_new_tokens=GEN)
+    for _ in range(4):
+        eng.step()
+    eng._demote_engine("epoch")
+    assert eng.mode == "epoch" and eng._cache_kind == "epoch"
+    state = save_engine(eng)
+
+    fresh = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                     mode="distilled")
+    restore_engine(fresh, state)
+    assert fresh.mode == "epoch" and fresh._cache_kind == "epoch"
+    fresh.run()
+    assert all(r.status in ("finished", "error") for r in fresh.finished)
+    assert len(fresh.finished) == len(PROMPT_LENS)
+
+    # up-ladder: a distilled snapshot cannot restore into an epoch engine
+    dist = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                    mode="distilled")
+    upstate = save_engine(dist)
+    target = ContinuousBatchingEngine(params, cfg, n_slots=2,
+                                      max_len=MAX_LEN, mode="epoch")
+    with pytest.raises(ValueError, match="mode"):
+        restore_engine(target, upstate)
+
+
+# ---------------------------------------------------------------------------
+# drift sentinel: shadow-verify, alarm, demote
+# ---------------------------------------------------------------------------
+def test_sentinel_clean_run_no_alarms(distilled_model):
+    """On a healthy well-distilled engine the sentinel's shadow divergence
+    stays far below the tolerance: checks fire, no alarms, no demotion."""
+    cfg, params = distilled_model
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode="distilled", drift_check_every=2,
+                                   drift_tol=0.5)
+    for p in _prompts(cfg.vocab):
+        eng.submit(p, max_new_tokens=12)
+    eng.run()
+    assert eng.resilience.get("drift_checks") > 0
+    assert eng.resilience.get("drift_alarms") == 0
+    assert eng.mode == "distilled"
+    assert eng._drift_last is not None and eng._drift_last < 0.5
+    h = eng.metrics.get("serve_drift_logit_div")
+    assert h.count == eng.resilience.get("drift_checks")
+
+
+def test_sentinel_detects_silent_drift_and_demotes(distilled_model):
+    """A sign-flip drift fault (norm-preserving, invisible to the health
+    guard) trips the sentinel: drift_alarm event, engine demoted straight to
+    the exact epoch path, sentinel disarmed, and every request still reaches
+    a terminal status."""
+    cfg, params = distilled_model
+    inj = FaultInjector([{"tick": 6, "kind": "drift", "value": -2.0,
+                          "slot": 0}], seed=0)
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode="distilled", drift_check_every=2,
+                                   drift_tol=0.5, fault_injector=inj)
+    reqs = [eng.submit(p, max_new_tokens=12) for p in _prompts(cfg.vocab)]
+    eng.run()
+    assert [e for e in inj.log if e["kind"] == "drift"]
+    assert eng.resilience.get("drift_alarms") >= 1
+    assert eng.resilience.get("engine_demotions") == 1
+    assert eng.mode == "epoch" and eng._cache_kind == "epoch"
+    assert eng._sentinel is False          # disarmed after demotion
+    assert any(e["kind"] == "drift_alarm" for e in eng.events)
+    assert all(r.status in ("finished", "error") for r in reqs)
+    assert len(eng.finished) == len(reqs)
+
+
+def test_sentinel_ignored_outside_distilled_mode(distilled_model):
+    """drift_check_every on a non-distilled engine is a no-op (there is no
+    approximation to verify): no checks, no histogram samples."""
+    cfg, params = distilled_model
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode="epoch", drift_check_every=2)
+    assert eng._sentinel is False
+    for p in _prompts(cfg.vocab):
+        eng.submit(p, max_new_tokens=GEN)
+    eng.run()
+    assert eng.resilience.get("drift_checks") == 0
+
+
+def test_sentinel_zero_steady_state_compiles(distilled_model):
+    """warmup() warms the sentinel's shadow executables (epoch prefill at
+    every bucket, row gather, shadow decode): a warmed stream with checks
+    firing compiles nothing."""
+    from repro.serve.metrics import count_compiles
+    cfg, params = distilled_model
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode="distilled", drift_check_every=2)
+    eng.warmup(PROMPT_LENS)
+    with count_compiles() as scope:
+        for p in _prompts(cfg.vocab):
+            eng.submit(p, max_new_tokens=GEN)
+        eng.run()
+    assert eng.resilience.get("drift_checks") > 0
+    assert scope.compiles == 0, f"{scope.compiles} steady-state compiles"
+
+
+# ---------------------------------------------------------------------------
+# certificates
+# ---------------------------------------------------------------------------
+def test_distillation_certificate_sanity(distilled_model):
+    cfg, params = distilled_model
+    cert = distillation_certificate(params, cfg, MAX_LEN)
+    assert cert["horizon"] == MAX_LEN
+    assert cert["layers"] and all(k.startswith("l") for k in cert["layers"])
+    total = 0.0
+    for layer in cert["layers"].values():
+        assert 0.0 <= layer["max_abs"] <= layer["l1"] < float("inf")
+        total += layer["l1"]
+    assert cert["total_l1"] == pytest.approx(total)
+    # near-exact distillation => tight certificate
+    assert cert["total_l1"] < 0.5
+    # the engine surfaces the same certificate lazily
+    eng = ContinuousBatchingEngine(params, cfg, n_slots=2, max_len=MAX_LEN,
+                                   mode="distilled")
+    assert eng.drift_certificate["total_l1"] == pytest.approx(
+        cert["total_l1"], rel=1e-5)
+
+
+def test_truncation_certificate_bounds_measured_error():
+    """Deterministic version of the hypothesis property (tier-1 runs
+    without hypothesis): the per-position certificate curve upper-bounds
+    the measured |full - truncated| filter error, refit=False."""
+    from repro.core import eval_filter, init_modal
+    from repro.core.truncation import (modal_truncation,
+                                       truncation_error_certificate)
+    L, d, keep = 96, 6, 3
+    for seed in (0, 1, 2):
+        ssm = init_modal(jax.random.PRNGKey(seed), (1,), d,
+                         r_minmax=(0.2, 0.95))
+        cert = truncation_error_certificate(ssm, keep, L)
+        full = np.asarray(eval_filter(ssm, L), np.float64)[0]
+        trunc = np.asarray(eval_filter(modal_truncation(ssm, keep), L),
+                           np.float64)[0]
+        err = np.abs(full - trunc)
+        curve = np.asarray(cert["curve"], np.float64)[0]
+        assert curve[0] == 0.0 and err[0] < 1e-6
+        assert np.all(err <= curve + 1e-4), (seed, (err - curve).max())
+        assert err[1:].sum() <= float(cert["l1_bound"][0]) + 1e-3

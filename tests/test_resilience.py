@@ -362,6 +362,14 @@ def test_checkpoint_shape_mismatch_rejected(hyena_model, tmp_path):
     with pytest.raises(ValueError, match="format"):
         restore_engine(ContinuousBatchingEngine(params, cfg, n_slots=2,
                                                 max_len=MAX_LEN), bad)
+    # a snapshot from a HIGHER ladder rung cannot restore into a lower one
+    # (the reverse direction — saved lower, engine higher — replays the
+    # demotion instead; covered in test_epoch.py)
+    up = dict(state, mode="distilled")
+    with pytest.raises(ValueError, match="mode"):
+        restore_engine(ContinuousBatchingEngine(params, cfg, n_slots=2,
+                                                max_len=MAX_LEN,
+                                                mode="epoch"), up)
 
 
 # ---------------------------------------------------------------------------

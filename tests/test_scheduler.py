@@ -70,12 +70,12 @@ def _sequential_greedy(cfg, params, prompts, gens, mode):
 # Consistency: interleaved == sequential, token for token
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("overlap", [True, False])
-@pytest.mark.parametrize("mode", ["distilled", "cached_conv"])
+@pytest.mark.parametrize("mode", ["distilled", "cached_conv", "epoch"])
 def test_interleaved_matches_sequential_lcsm(hyena_model, mode, overlap):
     """5 concurrent requests with different prompt lengths through 2 slots
     (forces queueing + eviction + slot reuse) produce exactly the tokens of
-    5 sequential single-request runs — in both LCSM deployment modes, with
-    both the overlapped (async) and synchronous host loops."""
+    5 sequential single-request runs — in all three LCSM deployment modes,
+    with both the overlapped (async) and synchronous host loops."""
     cfg, params = hyena_model
     prompts = _prompts(cfg.vocab)
     want = _sequential_greedy(cfg, params, prompts, GEN_LENS, mode)

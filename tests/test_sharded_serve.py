@@ -3,8 +3,9 @@
 The heavyweight checks spawn a fresh interpreter with 4 forced host devices
 (the main test process keeps a single device) and assert the contract from
 serve/README.md "Sharded slot pool": greedy serving on a 4-way sharded pool
-is token-for-token identical to the single-device engine — distilled and
-cached-conv modes, speculation on and off — with ZERO steady-state XLA
+is token-for-token identical to the single-device engine — distilled,
+cached-conv, and epoch modes, speculation on and off — with ZERO
+steady-state XLA
 compiles, and checkpoints restore only into the same mesh layout.
 
 The fast single-device tests cover the pieces the sharding work flushed
@@ -109,6 +110,18 @@ def test_sharded_greedy_token_identity_cached_conv():
 for spec in (0, 2):
     base, _, _ = run(None, "cached_conv", spec)
     shard, n, _ = run(make_slot_mesh(4), "cached_conv", spec, count=True)
+    assert base == shard, (spec, base, shard)
+    assert n == 0, f"spec={spec}: {n} steady-state compiles on the mesh"
+""")
+
+
+def test_sharded_greedy_token_identity_epoch():
+    """4-way sharded pool == single device, epoch mode (exact FutureFill
+    fallback), spec off and on, zero steady-state compiles sharded."""
+    run_sub(_COMMON + """
+for spec in (0, 2):
+    base, _, _ = run(None, "epoch", spec)
+    shard, n, _ = run(make_slot_mesh(4), "epoch", spec, count=True)
     assert base == shard, (spec, base, shard)
     assert n == 0, f"spec={spec}: {n} steady-state compiles on the mesh"
 """)
